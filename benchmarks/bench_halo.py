@@ -1,0 +1,56 @@
+"""Paper Fig. 9 analogue: boundary pack/exchange/unpack (EO1/EO2) cost.
+
+Measures the halo-extension path (slice + ppermute + concat) against the
+bulk stencil on the same local volume, and reports the halo-to-bulk byte
+ratio that governs the overlap window at scale.  Runs on however many
+devices the process has (1 device -> self-permute, still structurally
+identical)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import su3, evenodd
+from repro.kernels import layout, ops
+from repro.distributed import halo
+from .common import Row, time_fn
+
+
+def run() -> list:
+    rows: list[Row] = []
+    Tl, Zl, Y, Xh = 8, 8, 16, 16
+    spin = jax.random.normal(jax.random.PRNGKey(0),
+                             (Tl, Zl, 24, Y, Xh))
+
+    n = jax.device_count()
+    mesh_shape = (n, 1) if n > 1 else (1, 1)
+    mesh = jax.make_mesh(mesh_shape, ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def ext_fn(x):
+        return halo.extend_tz(x, ("data",), ("model",), 0, 1)
+
+    sharded = jax.shard_map(ext_fn, mesh=mesh,
+                            in_specs=P("data", "model"),
+                            out_specs=P("data", "model"),
+                            check_vma=False)
+    fn = jax.jit(sharded)
+    us_halo = time_fn(fn, spin)
+
+    halo_bytes = 4 * (2 * Zl + 2 * (Tl + 2)) * 24 * Y * Xh
+    bulk_bytes = 4 * Tl * Zl * 24 * Y * Xh
+    rows.append(("halo_extend_tz", us_halo,
+                 f"halo_bytes={halo_bytes};bulk_ratio="
+                 f"{halo_bytes / bulk_bytes:.3f}"))
+
+    # pack (slice) and unpack (merge) measured separately
+    pack = jax.jit(lambda x: (x[:1], x[-1:], x[:, :1], x[:, -1:]))
+    us_pack = time_fn(pack, spin)
+    rows.append(("halo_pack_eo1", us_pack, "slices=4"))
+
+    unpack = jax.jit(lambda x, lo, hi: jnp.concatenate([lo, x, hi], 0))
+    us_unpack = time_fn(unpack, spin, spin[:1], spin[-1:])
+    rows.append(("halo_unpack_eo2", us_unpack, "concat_t"))
+    return rows

@@ -1,0 +1,34 @@
+"""Per-(arch x shape) roofline summary from the dry-run records (the
+beyond-paper table).  Requires `python -m repro.launch.dryrun` to have
+populated experiments/dryrun/."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from .common import Row
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / \
+    "dryrun"
+
+
+def run() -> list:
+    rows: list[Row] = []
+    if not DRYRUN.exists():
+        return [("lm_roofline", -1.0, "no dryrun records; run "
+                 "python -m repro.launch.dryrun first")]
+    try:
+        from repro.launch.roofline import analyze
+    except Exception:
+        return [("lm_roofline", -1.0, "roofline import failed")]
+    for f in sorted(DRYRUN.glob("*.json")):
+        rec = json.loads(f.read_text())
+        a = analyze(rec)
+        if not a:
+            continue
+        rows.append((f"roofline_{a['cell']}",
+                     a["step_time_bound_s"] * 1e6,
+                     f"dominant={a['dominant']};frac="
+                     f"{a['roofline_fraction']:.3f};"
+                     f"fit_gib={a['fit_gib']:.1f}"))
+    return rows

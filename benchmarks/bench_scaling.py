@@ -1,0 +1,84 @@
+"""Paper Fig. 10 analogue: weak scaling of the even-odd Wilson operator.
+
+Fixed local volume per device, growing device count (forced host devices
+in subprocesses: 1, 2, 4, 8).  Reports wall time per Dhat application and
+the sustained-throughput-per-device ratio to the 1-device case — the
+paper's "performance per node is almost constant" claim, reproduced
+structurally on CPU.  The TPU-projected version of this figure comes from
+the dry-run collective terms (see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+from .common import Row
+
+_CHILD = """
+import time
+import jax, jax.numpy as jnp
+from repro.core import su3, evenodd
+from repro.kernels import layout, ops
+from repro.distributed import qcd
+
+n = jax.device_count()
+Tl = 4
+T, Z, Y, X = Tl * n, 8, 8, 16
+U = su3.random_gauge(jax.random.PRNGKey(0), (T, Z, Y, X))
+psi = (jax.random.normal(jax.random.PRNGKey(1), (T, Z, Y, X, 4, 3))
+       + 1j*jax.random.normal(jax.random.PRNGKey(2), (T, Z, Y, X, 4, 3))
+       ).astype(jnp.complex64)
+Ue, Uo = evenodd.pack_gauge(U)
+e, _ = evenodd.pack(psi)
+Uep, Uop = ops.make_planar_fields(Ue, Uo)
+ep = layout.spinor_to_planar(e)
+mesh = jax.make_mesh((n, 1), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+part = qcd.QCDPartition.for_mesh(mesh, backend="jnp", overlap="fused")
+dhat = jax.jit(qcd.make_dhat_fn(part, 0.13))
+args = (jax.device_put(Uep, part.gauge_sharding()),
+        jax.device_put(Uop, part.gauge_sharding()),
+        jax.device_put(ep, part.spinor_sharding()))
+for _ in range(2):
+    jax.block_until_ready(dhat(*args))
+ts = []
+for _ in range(5):
+    t0 = time.perf_counter()
+    jax.block_until_ready(dhat(*args))
+    ts.append(time.perf_counter() - t0)
+ts.sort()
+print("RESULT", n, ts[len(ts)//2])
+"""
+
+
+def run() -> list:
+    rows: list[Row] = []
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    base = None
+    for n in (1, 2, 4, 8):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n} "
+                            + env.get("XLA_FLAGS", ""))
+        env["PYTHONPATH"] = str(repo / "src")
+        out = subprocess.run([sys.executable, "-c",
+                              textwrap.dedent(_CHILD)],
+                             capture_output=True, text=True, env=env,
+                             timeout=900)
+        if out.returncode != 0:
+            rows.append((f"weak_scaling_n{n}", -1.0,
+                         f"error={out.stderr.strip()[-120:]}"))
+            continue
+        line = [l for l in out.stdout.splitlines()
+                if l.startswith("RESULT")][0]
+        _, n_s, t_s = line.split()
+        t = float(t_s)
+        us = t * 1e6
+        if base is None:
+            base = us
+        # weak scaling: ideal == constant time; report parallel efficiency
+        rows.append((f"weak_scaling_n{n}", us,
+                     f"efficiency={base / us:.3f}"))
+    return rows

@@ -1,0 +1,50 @@
+"""Paper Table 1 analogue: 2-D site-packing shape sweep.
+
+The paper varies VLENY x VLENX at fixed local volume.  On TPU the packed
+tile is the whole (Y, Xh) plane, so the sweep becomes the plane aspect
+ratio at fixed volume: how the same 4-D volume maps onto (sublane, lane)
+dims.  We measure the jit'd even-odd Dhat wall time per application on
+CPU (structure-true; absolute numbers are CPU-bound) and report the
+model-flops throughput, for the paper's three local volumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import evenodd, su3
+from repro.kernels import layout, ops, ref
+from .common import Row, time_fn
+
+# (label, (T, Z, Y, X)) — paper Table 1 volumes, aspect-swept in (Y, X)
+CASES = [
+    ("16x16x16x16_y16x8", (16, 16, 16, 16)),
+    ("16x16x8x32_y8x16", (16, 16, 8, 32)),
+    ("16x16x32x8_y32x4", (16, 16, 32, 8)),
+    ("64x16x8x8_y8x4", (16, 8, 8, 64)),     # 64x16x8x8 permuted: X=64 packed
+    ("64x32x16x8_y16x4", (8, 16, 16, 64)),  # reduced T*Z to bound CPU time
+]
+
+
+def run() -> list:
+    rows: list[Row] = []
+    kappa = 0.13
+    for label, (T, Z, Y, X) in CASES:
+        U = su3.random_gauge(jax.random.PRNGKey(0), (T, Z, Y, X))
+        psi = (jax.random.normal(jax.random.PRNGKey(1), (T, Z, Y, X, 4, 3))
+               + 1j * jax.random.normal(jax.random.PRNGKey(2),
+                                        (T, Z, Y, X, 4, 3))
+               ).astype(jnp.complex64)
+        Ue, Uo = evenodd.pack_gauge(U)
+        e, _ = evenodd.pack(psi)
+        Uep, Uop = ops.make_planar_fields(Ue, Uo)
+        ep = layout.spinor_to_planar(e)
+
+        fn = jax.jit(lambda a, b, c: ref.apply_dhat_planar_ref(a, b, c,
+                                                               kappa))
+        us = time_fn(fn, Uep, Uop, ep)
+        vol = T * Z * Y * X
+        gflops = 1368.0 * vol / (us * 1e-6) / 1e9
+        rows.append((f"tiling_{label}", us,
+                     f"cpu_sustained_gflops={gflops:.2f}"))
+    return rows

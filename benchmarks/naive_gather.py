@@ -1,0 +1,67 @@
+"""Deliberately gather-based even-odd hopping block — the "before" code of
+the paper's Fig. 8 story.
+
+The paper found the compiler emitting gather-load/scatter-store for a
+portable inner loop, bottlenecking L1; replacing them with register
+shuffles (sel/tbl/ext) recovered 10x.  This module is the JAX analogue of
+the *bad* version: every neighbor fetch is an explicit index gather
+(``take_along_axis`` with per-site index arrays) instead of the masked
+rolls in :mod:`repro.core.evenodd`.  Benchmarked against the shuffle
+version in bench_breakdown.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import gamma
+from repro.core.lattice import MU_X, NDIM, row_parity
+
+
+def _neighbor_index(shape, mu, direction, out_parity):
+    """Per-site gather indices (flat, over the compacted lattice)."""
+    T, Z, Y, Xh = shape
+    t = jnp.arange(T).reshape(T, 1, 1, 1)
+    z = jnp.arange(Z).reshape(1, Z, 1, 1)
+    y = jnp.arange(Y).reshape(1, 1, Y, 1)
+    xh = jnp.arange(Xh).reshape(1, 1, 1, Xh)
+    t, z, y, xh = (jnp.broadcast_to(a, shape) for a in (t, z, y, xh))
+    if mu == 3:
+        t = (t + direction) % T
+    elif mu == 2:
+        z = (z + direction) % Z
+    elif mu == 1:
+        y = (y + direction) % Y
+    else:
+        par = (t + z + y) % 2
+        m = (out_parity + (1 if direction > 0 else 0)) % 2
+        xh = jnp.where(par == m, (xh + direction) % Xh, xh)
+    return ((t * Z + z) * Y + y) * Xh + xh
+
+
+def gather_fetch(field, idx):
+    """field: (T,Z,Y,Xh,...) -> neighbor values via flat gather."""
+    T, Z, Y, Xh = field.shape[:4]
+    rest = field.shape[4:]
+    flat = field.reshape(T * Z * Y * Xh, *rest)
+    return flat[idx.reshape(-1)].reshape(T, Z, Y, Xh, *rest)
+
+
+def hop_block_gather(U_e, U_o, src, out_parity):
+    """Same math as evenodd.hop_block, all neighbor access via gathers."""
+    shape = src.shape[:4]
+    U_out = U_o if out_parity else U_e
+    U_in = U_e if out_parity else U_o
+    out = jnp.zeros_like(src)
+    for mu in range(NDIM):
+        idx_f = _neighbor_index(shape, mu, +1, out_parity)
+        idx_b = _neighbor_index(shape, mu, -1, out_parity)
+        fwd = gather_fetch(src, idx_f)
+        h = gamma.project(fwd, mu, s=-1)
+        uh = jnp.einsum("...ab,...hb->...ha", U_out[mu], h)
+        out = out + gamma.reconstruct(uh, mu, s=-1)
+        bwd = gather_fetch(src, idx_b)
+        u_bwd = gather_fetch(U_in[mu], idx_b)
+        h = gamma.project(bwd, mu, s=+1)
+        uh = jnp.einsum("...ba,...hb->...ha", u_bwd.conj(), h)
+        out = out + gamma.reconstruct(uh, mu, s=+1)
+    return out

@@ -1,0 +1,41 @@
+"""Benchmark runner — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only tiling,breakdown,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+BENCHES = ("tiling", "breakdown", "halo", "solver", "scaling", "lm")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help=f"comma list from {BENCHES}")
+    args = ap.parse_args()
+    which = args.only.split(",") if args.only else list(BENCHES)
+
+    from .common import emit
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in which:
+        try:
+            mod = __import__(f"benchmarks.bench_{name}",
+                             fromlist=["run"])
+            emit(mod.run())
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"bench_{name},-1.0,error", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

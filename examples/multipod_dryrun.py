@@ -1,0 +1,29 @@
+"""Multi-pod dry-run example: lower + compile one LM cell and the QCD
+production lattice on the 512-chip mesh, print the roofline terms.
+
+  PYTHONPATH=src python examples/multipod_dryrun.py
+(needs no accelerator: forces 512 host devices)
+"""
+import subprocess
+import sys
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def main():
+    env_py = [sys.executable, "-m", "repro.launch.dryrun",
+              "--arch", "deepseek-7b", "--shape", "decode_32k",
+              "--mesh", "multi"]
+    print("running:", " ".join(env_py))
+    subprocess.run(env_py, check=True, cwd=REPO,
+                   env={"PYTHONPATH": str(REPO / "src"),
+                        "PATH": "/usr/bin:/bin:/usr/local/bin"})
+    subprocess.run([sys.executable, "-m", "repro.launch.roofline"],
+                   check=True, cwd=REPO,
+                   env={"PYTHONPATH": str(REPO / "src"),
+                        "PATH": "/usr/bin:/bin:/usr/local/bin"})
+
+
+if __name__ == "__main__":
+    main()

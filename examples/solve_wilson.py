@@ -1,0 +1,22 @@
+"""End-to-end driver example: batch of Wilson solves with checkpointing
+and a simulated failure + restart.
+
+  PYTHONPATH=src python examples/solve_wilson.py
+"""
+import tempfile
+
+from repro.launch import solve
+
+
+def main():
+    with tempfile.TemporaryDirectory() as d:
+        print("=== two solves with checkpointing ===")
+        solve.main(["--lattice", "wilson-16x16x16x16", "--tol", "1e-5",
+                    "--n-solves", "2", "--ckpt-dir", d])
+        print("\n=== restart: resume the same workload (idempotent) ===")
+        solve.main(["--lattice", "wilson-16x16x16x16", "--tol", "1e-5",
+                    "--n-solves", "1", "--ckpt-dir", d])
+
+
+if __name__ == "__main__":
+    main()

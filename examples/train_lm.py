@@ -1,0 +1,32 @@
+"""Train a ~100M-param member of an assigned architecture family for a
+few hundred steps on synthetic data, with checkpoint/restart.
+
+  PYTHONPATH=src python examples/train_lm.py                 # quick demo
+  PYTHONPATH=src python examples/train_lm.py --full          # ~100M, 300 steps
+"""
+import argparse
+import tempfile
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--arch", default="deepseek-7b")
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory() as d:
+        if args.full:
+            # ~100M params: scale 0.22 of deepseek-7b (d=896, 6 layers)
+            train.main(["--arch", args.arch, "--scale", "0.22",
+                        "--steps", "300", "--batch", "8", "--seq", "512",
+                        "--ckpt-dir", d, "--ckpt-every", "100"])
+        else:
+            train.main(["--arch", args.arch, "--scale", "0.03",
+                        "--steps", "30", "--batch", "4", "--seq", "128",
+                        "--ckpt-dir", d, "--ckpt-every", "10"])
+
+
+if __name__ == "__main__":
+    main()

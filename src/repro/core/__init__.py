@@ -1,0 +1,19 @@
+"""Core lattice-QCD library: the paper's contribution in JAX.
+
+Layering (each validated against the one above it):
+
+1. :mod:`repro.core.wilson` — textbook full-lattice Wilson operator.
+2. :mod:`repro.core.evenodd` — even-odd compacted layout + hopping blocks
+   (the paper's data layout, pure jnp complex).
+3. :mod:`repro.kernels.ref` — planar (re/im separated) float layout, the
+   oracle for the Pallas kernel.
+4. :mod:`repro.kernels.wilson_stencil` — the Pallas TPU kernel.
+"""
+from .lattice import LatticeGeometry, MU_X, MU_Y, MU_Z, MU_T, shift, site_parity
+from .gamma import GAMMA, GAMMA5, project, reconstruct
+from .su3 import random_gauge, unit_gauge, plaquette, unitarity_defect
+from .wilson import apply_wilson, apply_wilson_dagger, hop, DW_FLOPS_PER_SITE
+from .evenodd import (EVEN, ODD, pack, unpack, pack_gauge, eo_shift,
+                      hop_oe, hop_eo, apply_dhat, apply_dhat_dagger,
+                      apply_wilson_eo)
+from .solver import cg, cgnr, bicgstab, solve_wilson_eo, SolveResult

@@ -1,0 +1,70 @@
+"""Gamma-matrix algebra for the Wilson fermion matrix.
+
+We use the DeGrand-Rossi (chiral) basis, in which every ``(1 + s*gamma_mu)``
+projector has the half-spinor structure exploited by the paper (Sec. 2):
+
+* project the 4-spinor onto two 2-component half-spinors ``h = (h0, h1)``,
+* multiply the SU(3) link on the color index of each half-spinor,
+* reconstruct the 4-spinor: rows 0,1 are ``h0, h1`` and rows 2,3 are
+  ``coeff * h_perm`` with ``coeff`` in ``{+-1, +-i}``.
+
+This halves the SU(3) work per hop and is the structure hand-coded in the
+Pallas kernel.  The generic matrix forms below are the oracle used by tests.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_I = 1j
+
+# gamma_mu, mu = 0(x), 1(y), 2(z), 3(t); Hermitian, gamma^2 = 1.
+GAMMA = np.zeros((4, 4, 4), dtype=np.complex64)
+GAMMA[0] = [[0, 0, 0, _I], [0, 0, _I, 0], [0, -_I, 0, 0], [-_I, 0, 0, 0]]
+GAMMA[1] = [[0, 0, 0, -1], [0, 0, 1, 0], [0, 1, 0, 0], [-1, 0, 0, 0]]
+GAMMA[2] = [[0, 0, _I, 0], [0, 0, 0, -_I], [-_I, 0, 0, 0], [0, _I, 0, 0]]
+GAMMA[3] = [[0, 0, 1, 0], [0, 0, 0, 1], [1, 0, 0, 0], [0, 1, 0, 0]]
+GAMMA5 = np.diag([1, 1, -1, -1]).astype(np.complex64)  # = g_x g_y g_z g_t
+
+
+def projector(mu: int, s: int) -> np.ndarray:
+    """Dense ``(1 + s*gamma_mu)`` as a 4x4 matrix (twice a projector)."""
+    return np.eye(4, dtype=np.complex64) + s * GAMMA[mu]
+
+
+def project(psi: jnp.ndarray, mu: int, s: int) -> jnp.ndarray:
+    """Half-spinor projection of ``(1 + s*gamma_mu) psi``.
+
+    ``psi``: ``(..., 4, 3)`` -> returns ``(..., 2, 3)`` such that
+    :func:`reconstruct` recovers the full ``(1 + s*gamma_mu) psi``.
+    """
+    p0, p1, p2, p3 = (psi[..., i, :] for i in range(4))
+    si = s * _I
+    if mu == 0:  # x
+        h0, h1 = p0 + si * p3, p1 + si * p2
+    elif mu == 1:  # y
+        h0, h1 = p0 - s * p3, p1 + s * p2
+    elif mu == 2:  # z
+        h0, h1 = p0 + si * p2, p1 - si * p3
+    elif mu == 3:  # t
+        h0, h1 = p0 + s * p2, p1 + s * p3
+    else:
+        raise ValueError(f"bad direction {mu}")
+    return jnp.stack([h0, h1], axis=-2)
+
+
+def reconstruct(h: jnp.ndarray, mu: int, s: int) -> jnp.ndarray:
+    """Rebuild the 4-spinor from the half-spinor of ``(1 + s*gamma_mu)``."""
+    h0, h1 = h[..., 0, :], h[..., 1, :]
+    si = s * _I
+    if mu == 0:  # x
+        r2, r3 = -si * h1, -si * h0
+    elif mu == 1:  # y
+        r2, r3 = s * h1, -s * h0
+    elif mu == 2:  # z
+        r2, r3 = -si * h0, si * h1
+    elif mu == 3:  # t
+        r2, r3 = s * h0, s * h1
+    else:
+        raise ValueError(f"bad direction {mu}")
+    return jnp.stack([h0, h1, r2, r3], axis=-2)

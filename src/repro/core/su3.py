@@ -1,0 +1,65 @@
+"""SU(3) gauge-field utilities."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .lattice import NDIM, shift
+
+
+def random_su3(key: jax.Array, shape: Sequence[int], dtype=jnp.complex64) -> jnp.ndarray:
+    """Haar-ish random SU(3) matrices of shape ``(*shape, 3, 3)``.
+
+    Gram-Schmidt (QR) on a random complex matrix, with the determinant phase
+    divided out so ``det U = 1`` exactly (up to fp rounding).
+    """
+    kr, ki = jax.random.split(key)
+    m = (jax.random.normal(kr, (*shape, 3, 3))
+         + 1j * jax.random.normal(ki, (*shape, 3, 3))).astype(dtype)
+    q, r = jnp.linalg.qr(m)
+    # Fix the U(1) phases left free by QR: make diag(r) real-positive.
+    d = jnp.diagonal(r, axis1=-2, axis2=-1)
+    q = q * (d / jnp.abs(d))[..., None, :]
+    det = jnp.linalg.det(q)
+    return q * (det[..., None, None] ** (-1.0 / 3.0))
+
+
+def random_gauge(key: jax.Array, lat_shape: Sequence[int], dtype=jnp.complex64) -> jnp.ndarray:
+    """Random gauge field ``(4, T, Z, Y, X, 3, 3)``."""
+    return random_su3(key, (NDIM, *lat_shape), dtype=dtype)
+
+
+def unit_gauge(lat_shape: Sequence[int], dtype=jnp.complex64) -> jnp.ndarray:
+    """Free-field (identity) gauge configuration."""
+    eye = jnp.eye(3, dtype=dtype)
+    return jnp.broadcast_to(eye, (NDIM, *lat_shape, 3, 3))
+
+
+def unitarity_defect(U: jnp.ndarray) -> jnp.ndarray:
+    """max |U U^dag - 1| over the field; ~1e-6 for healthy f32 SU(3)."""
+    eye = jnp.eye(3, dtype=U.dtype)
+    uud = jnp.einsum("...ab,...cb->...ac", U, U.conj())
+    return jnp.max(jnp.abs(uud - eye))
+
+
+def plaquette(U: jnp.ndarray) -> jnp.ndarray:
+    """Average plaquette ``Re tr P / 3`` over all sites and planes.
+
+    ``P_{mu,nu}(x) = U_mu(x) U_nu(x+mu) U_mu(x+nu)^dag U_nu(x)^dag``;
+    gauge invariant, equals 1 for the unit gauge.
+    """
+    total = 0.0
+    count = 0
+    for mu in range(NDIM):
+        for nu in range(mu + 1, NDIM):
+            u_mu, u_nu = U[mu], U[nu]
+            u_nu_xmu = shift(u_nu, mu, +1)  # U_nu(x+mu)
+            u_mu_xnu = shift(u_mu, nu, +1)  # U_mu(x+nu)
+            p = jnp.einsum("...ab,...bc,...dc,...ed->...ae",
+                           u_mu, u_nu_xmu, u_mu_xnu.conj(), u_nu.conj())
+            tr = jnp.trace(p, axis1=-2, axis2=-1)
+            total = total + jnp.mean(tr.real)
+            count += 1
+    return total / (3.0 * count)

@@ -1,0 +1,2 @@
+from . import compress, halo, qcd
+from .qcd import QCDPartition, make_dhat_dagger_fn, make_dhat_fn, make_hop_fn

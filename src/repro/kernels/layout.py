@@ -1,0 +1,54 @@
+"""Planar (re/im-separated) field layout for the TPU kernel.
+
+The A64FX implementation keeps real and imaginary parts in *separate* SIMD
+vectors and packs an x-y tile of sites into each vector (paper Sec. 3.2).
+The TPU analogue puts the ``(Y, Xh)`` site plane in the two trailing array
+dims — sublanes x lanes of the VPU — and splits complex numbers into a
+re/im component axis:
+
+* spinor: ``(T, Z, Y, Xh, 4, 3)`` complex  <->  ``(T, Z, 24, Y, Xh)`` real
+  with component index ``c = (spin * 3 + color) * 2 + reim``;
+* gauge:  ``(4, T, Z, Y, Xh, 3, 3)`` complex <-> ``(4, T, Z, 18, Y, Xh)``
+  real with ``c = (row * 3 + col) * 2 + reim``.
+
+This is the AoSoA layout of Eq. (6)/(7) with the SIMD vector grown to a
+whole VMEM-resident plane.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SPINOR_COMPS = 24  # 4 spin x 3 color x re/im
+GAUGE_COMPS = 18   # 3 x 3 x re/im
+
+
+def spinor_to_planar(psi: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """``(T, Z, Y, Xh, 4, 3)`` complex -> ``(T, Z, 24, Y, Xh)`` real."""
+    T, Z, Y, Xh = psi.shape[:4]
+    arr = jnp.stack([psi.real, psi.imag], axis=-1)       # (T,Z,Y,Xh,4,3,2)
+    arr = arr.transpose(0, 1, 4, 5, 6, 2, 3)             # (T,Z,4,3,2,Y,Xh)
+    return arr.reshape(T, Z, SPINOR_COMPS, Y, Xh).astype(dtype)
+
+
+def spinor_from_planar(p: jnp.ndarray, dtype=jnp.complex64) -> jnp.ndarray:
+    """Inverse of :func:`spinor_to_planar`."""
+    T, Z, _, Y, Xh = p.shape
+    arr = p.astype(jnp.float32).reshape(T, Z, 4, 3, 2, Y, Xh)
+    arr = arr.transpose(0, 1, 5, 6, 2, 3, 4)             # (T,Z,Y,Xh,4,3,2)
+    return (arr[..., 0] + 1j * arr[..., 1]).astype(dtype)
+
+
+def gauge_to_planar(u: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """``(4, T, Z, Y, Xh, 3, 3)`` complex -> ``(4, T, Z, 18, Y, Xh)`` real."""
+    _, T, Z, Y, Xh = u.shape[:5]
+    arr = jnp.stack([u.real, u.imag], axis=-1)           # (4,T,Z,Y,Xh,3,3,2)
+    arr = arr.transpose(0, 1, 2, 5, 6, 7, 3, 4)          # (4,T,Z,3,3,2,Y,Xh)
+    return arr.reshape(4, T, Z, GAUGE_COMPS, Y, Xh).astype(dtype)
+
+
+def gauge_from_planar(p: jnp.ndarray, dtype=jnp.complex64) -> jnp.ndarray:
+    """Inverse of :func:`gauge_to_planar`."""
+    _, T, Z, _, Y, Xh = p.shape
+    arr = p.astype(jnp.float32).reshape(4, T, Z, 3, 3, 2, Y, Xh)
+    arr = arr.transpose(0, 1, 2, 6, 7, 3, 4, 5)          # (4,T,Z,Y,Xh,3,3,2)
+    return (arr[..., 0] + 1j * arr[..., 1]).astype(dtype)

@@ -1,0 +1,356 @@
+"""Pallas TPU kernel for the even-odd Wilson hopping blocks.
+
+Maps the paper's A64FX SIMD strategy onto the TPU memory hierarchy:
+
+* grid over ``(T, Z)``; each grid step owns one x-y site plane — the 2-D
+  SIMD tile of the paper grown to a VMEM block (``BlockSpec`` below);
+* the x-shift of the even-odd compacted layout (paper Fig. 5, ``sel`` +
+  ``tbl``) is a lane-roll of the plane masked by the row parity
+  ``(t+z+y) % 2``;
+* the y-shift (Fig. 6, ``ext``) is a sublane-roll;
+* z/t neighbors arrive as extra pipelined operands of the *same* array
+  with shifted ``index_map`` (modular wrap for the periodic single-shard
+  case, or offset-by-one into halo-extended arrays for the distributed
+  case) — no gather/scatter anywhere, exactly the paper's rule;
+* complex arithmetic is planar: separate re/im component planes, pure f32
+  mul/add on the VPU (the A64FX argument against ``fcmla`` becomes a hard
+  constraint on TPU);
+* SU(3) x half-spinor products are fully unrolled element-wise FMAs over
+  the plane: color=3 contractions are far below MXU size, so the VPU is
+  the right unit — the systolic array is *not* used, by design.
+
+All 8 hop directions are computed and accumulated in VMEM registers per
+plane; the plane is written once.  Optionally the kernel fuses the
+``psi0 + coeff * hop`` axpy of the even-odd preconditioned operator so the
+accumulator never round-trips through HBM (beyond-paper fusion; QWS does
+the analogous fusion on A64FX).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .layout import GAUGE_COMPS, SPINOR_COMPS
+
+# Flops per lattice site of one hopping block application, QXS convention.
+HOP_FLOPS_PER_SITE = 1320
+
+
+def _c(p: jnp.ndarray, s: int, a: int):
+    """(re, im) planes of spinor component (spin s, color a)."""
+    i = (s * 3 + a) * 2
+    return p[i], p[i + 1]
+
+
+def _u(u: jnp.ndarray, a: int, b: int):
+    """(re, im) planes of gauge element (row a, col b)."""
+    i = (a * 3 + b) * 2
+    return u[i], u[i + 1]
+
+
+def _sgn(s: int, v):
+    return v if s > 0 else -v
+
+
+def _proj(p: jnp.ndarray, mu: int, s: int):
+    """Half-spinor projection of ``(1 + s*gamma_mu)``; returns h[2][3] pairs."""
+    h = [[None] * 3 for _ in range(2)]
+    for a in range(3):
+        p0r, p0i = _c(p, 0, a)
+        p1r, p1i = _c(p, 1, a)
+        p2r, p2i = _c(p, 2, a)
+        p3r, p3i = _c(p, 3, a)
+        if mu == 0:    # x: h0 = p0 + s*i*p3, h1 = p1 + s*i*p2
+            h[0][a] = (p0r - _sgn(s, p3i), p0i + _sgn(s, p3r))
+            h[1][a] = (p1r - _sgn(s, p2i), p1i + _sgn(s, p2r))
+        elif mu == 1:  # y: h0 = p0 - s*p3,  h1 = p1 + s*p2
+            h[0][a] = (p0r - _sgn(s, p3r), p0i - _sgn(s, p3i))
+            h[1][a] = (p1r + _sgn(s, p2r), p1i + _sgn(s, p2i))
+        elif mu == 2:  # z: h0 = p0 + s*i*p2, h1 = p1 - s*i*p3
+            h[0][a] = (p0r - _sgn(s, p2i), p0i + _sgn(s, p2r))
+            h[1][a] = (p1r + _sgn(s, p3i), p1i - _sgn(s, p3r))
+        else:          # t: h0 = p0 + s*p2,  h1 = p1 + s*p3
+            h[0][a] = (p0r + _sgn(s, p2r), p0i + _sgn(s, p2i))
+            h[1][a] = (p1r + _sgn(s, p3r), p1i + _sgn(s, p3i))
+    return h
+
+
+def _su3_mul(u: jnp.ndarray, h, dagger: bool):
+    """uh[s][a] = sum_b U[a,b] h[s][b] (or U^dag for ``dagger``)."""
+    out = [[None] * 3 for _ in range(2)]
+    for sp in range(2):
+        for a in range(3):
+            rr = ri = None
+            for b in range(3):
+                ur, ui = _u(u, b, a) if dagger else _u(u, a, b)
+                hr, hi = h[sp][b]
+                if dagger:  # conj(u): (ur - i ui)(hr + i hi)
+                    tr = ur * hr + ui * hi
+                    ti = ur * hi - ui * hr
+                else:
+                    tr = ur * hr - ui * hi
+                    ti = ur * hi + ui * hr
+                rr = tr if rr is None else rr + tr
+                ri = ti if ri is None else ri + ti
+            out[sp][a] = (rr, ri)
+    return out
+
+
+def _recon_acc(acc, uh, mu: int, s: int):
+    """Reconstruct the 4-spinor of ``(1 + s*gamma_mu)`` and accumulate."""
+
+    def add(sp, a, vr, vi):
+        i = (sp * 3 + a) * 2
+        acc[i] = vr if acc[i] is None else acc[i] + vr
+        acc[i + 1] = vi if acc[i + 1] is None else acc[i + 1] + vi
+
+    for a in range(3):
+        h0r, h0i = uh[0][a]
+        h1r, h1i = uh[1][a]
+        add(0, a, h0r, h0i)
+        add(1, a, h1r, h1i)
+        if mu == 0:    # r2 = -s*i*h1, r3 = -s*i*h0
+            add(2, a, _sgn(s, h1i), -_sgn(s, h1r))
+            add(3, a, _sgn(s, h0i), -_sgn(s, h0r))
+        elif mu == 1:  # r2 = s*h1, r3 = -s*h0
+            add(2, a, _sgn(s, h1r), _sgn(s, h1i))
+            add(3, a, -_sgn(s, h0r), -_sgn(s, h0i))
+        elif mu == 2:  # r2 = -s*i*h0, r3 = s*i*h1
+            add(2, a, _sgn(s, h0i), -_sgn(s, h0r))
+            add(3, a, -_sgn(s, h1i), _sgn(s, h1r))
+        else:          # r2 = s*h0, r3 = s*h1
+            add(2, a, _sgn(s, h0r), _sgn(s, h0i))
+            add(3, a, _sgn(s, h1r), _sgn(s, h1i))
+
+
+def _hop_kernel(*refs, out_parity: int, axpy_coeff: Optional[float]):
+    """Kernel body; operates on one (Y, Xh) plane of the lattice."""
+    if axpy_coeff is not None:
+        (par_ref, pc, pzp, pzm, ptp, ptm,
+         uo, uix, uiy, uizm, uitm, psi0, out_ref) = refs
+    else:
+        (par_ref, pc, pzp, pzm, ptp, ptm,
+         uo, uix, uiy, uizm, uitm, out_ref) = refs
+        psi0 = None
+
+    p = pc[0, 0]                      # (24, Y, Xh)
+    Y, Xh = p.shape[-2], p.shape[-1]
+    compute_dtype = p.dtype
+
+    # Row parity (t+z+y) % 2 — the predicate of the paper's `sel`.
+    tz_par = par_ref[0, 0]
+    row = (jax.lax.broadcasted_iota(jnp.int32, (Y, Xh), 0) + tz_par) % 2
+    mask_f = row == (out_parity + 1) % 2   # rows whose +x neighbor is at xh+1
+    mask_b = row == out_parity % 2         # rows whose -x neighbor is at xh-1
+
+    # In-register stencil shifts (sel/tbl/ext analogues).
+    psi_xf = jnp.where(mask_f, pltpu_roll(p, -1, -1), p)
+    psi_xb = jnp.where(mask_b, pltpu_roll(p, +1, -1), p)
+    psi_yf = pltpu_roll(p, -1, -2)
+    psi_yb = pltpu_roll(p, +1, -2)
+    psi_zf, psi_zb = pzp[0, 0], pzm[0, 0]
+    psi_tf, psi_tb = ptp[0, 0], ptm[0, 0]
+
+    u_out = uo[:, 0, 0]               # (4, 18, Y, Xh)
+    ux, uy = uix[0, 0, 0], uiy[0, 0, 0]
+    uz, ut = uizm[0, 0, 0], uitm[0, 0, 0]
+    u_xb = jnp.where(mask_b, pltpu_roll(ux, +1, -1), ux)
+    u_yb = pltpu_roll(uy, +1, -2)
+
+    acc = [None] * SPINOR_COMPS
+    hops = [(psi_xf, psi_xb, u_xb), (psi_yf, psi_yb, u_yb),
+            (psi_zf, psi_zb, uz), (psi_tf, psi_tb, ut)]
+    for mu, (pf, pb, ub) in enumerate(hops):
+        # Forward: (1 - g_mu) U_mu(x) psi(x + mu).
+        uh = _su3_mul(u_out[mu], _proj(pf, mu, -1), dagger=False)
+        _recon_acc(acc, uh, mu, -1)
+        # Backward: (1 + g_mu) U_mu^dag(x - mu) psi(x - mu).
+        uh = _su3_mul(ub, _proj(pb, mu, +1), dagger=True)
+        _recon_acc(acc, uh, mu, +1)
+
+    result = jnp.stack(acc).astype(compute_dtype)
+    if axpy_coeff is not None:
+        result = psi0[0, 0] + compute_dtype.type(axpy_coeff) * result
+    out_ref[0, 0] = result
+
+
+def pltpu_roll(x: jnp.ndarray, shift: int, axis: int) -> jnp.ndarray:
+    """Static roll; lowers to lane/sublane rotates on TPU."""
+    return jnp.roll(x, shift, axis=axis)
+
+
+def hop_block_ext_planar_native(u_out_p: jnp.ndarray,
+                                u_in_ext_p: jnp.ndarray,
+                                src_ext_p: jnp.ndarray,
+                                out_parity: int,
+                                parity_offset=0) -> jnp.ndarray:
+    """Planar-native jnp hopping block on halo-extended arrays.
+
+    Identical math to the Pallas kernel (same _proj/_su3_mul/_recon_acc
+    helpers, vectorized over (T, Z) instead of gridded), with NO
+    complex<->planar layout conversions — the pure-XLA fast path used by
+    the distributed jnp backend and the dry-run.  ``parity_offset`` may be
+    traced ((t0+z0) % 2 of the shard origin).
+    """
+    src = jnp.moveaxis(src_ext_p, 2, 0)        # (24, T+2, Z+2, Y, Xh)
+    u_in = jnp.moveaxis(u_in_ext_p, 3, 1)      # (4, 18, T+2, Z+2, Y, Xh)
+    u_out = jnp.moveaxis(u_out_p, 3, 1)        # (4, 18, T, Z, Y, Xh)
+    Tl, Zl = u_out_p.shape[1], u_out_p.shape[2]
+    Y, Xh = src_ext_p.shape[-2], src_ext_p.shape[-1]
+
+    c = src[:, 1:-1, 1:-1]                     # (24, T, Z, Y, Xh)
+    t = jnp.arange(Tl).reshape(Tl, 1, 1, 1)
+    z = jnp.arange(Zl).reshape(1, Zl, 1, 1)
+    y = jnp.arange(Y).reshape(1, 1, Y, 1)
+    row = (t + z + y + parity_offset) % 2      # (T, Z, Y, 1)
+    mask_f = row == (out_parity + 1) % 2
+    mask_b = row == out_parity % 2
+
+    psi_xf = jnp.where(mask_f, jnp.roll(c, -1, axis=-1), c)
+    psi_xb = jnp.where(mask_b, jnp.roll(c, +1, axis=-1), c)
+    psi_yf = jnp.roll(c, -1, axis=-2)
+    psi_yb = jnp.roll(c, +1, axis=-2)
+    psi_zf, psi_zb = src[:, 1:-1, 2:], src[:, 1:-1, :-2]
+    psi_tf, psi_tb = src[:, 2:, 1:-1], src[:, :-2, 1:-1]
+
+    ux = u_in[0, :, 1:-1, 1:-1]
+    uy = u_in[1, :, 1:-1, 1:-1]
+    uz = u_in[2, :, 1:-1, :-2]
+    ut = u_in[3, :, :-2, 1:-1]
+    u_xb = jnp.where(mask_b, jnp.roll(ux, +1, axis=-1), ux)
+    u_yb = jnp.roll(uy, +1, axis=-2)
+
+    acc = [None] * SPINOR_COMPS
+    hops = [(psi_xf, psi_xb, u_xb), (psi_yf, psi_yb, u_yb),
+            (psi_zf, psi_zb, uz), (psi_tf, psi_tb, ut)]
+    for mu, (pf, pb, ub) in enumerate(hops):
+        uh = _su3_mul(u_out[mu], _proj(pf, mu, -1), dagger=False)
+        _recon_acc(acc, uh, mu, -1)
+        uh = _su3_mul(ub, _proj(pb, mu, +1), dagger=True)
+        _recon_acc(acc, uh, mu, +1)
+    out = jnp.stack(acc).astype(src_ext_p.dtype)
+    return jnp.moveaxis(out, 0, 2)             # (T, Z, 24, Y, Xh)
+
+
+def _build_specs(Tl: int, Zl: int, Y: int, Xh: int, halo: bool,
+                 with_axpy: bool):
+    """BlockSpecs for (parity, psi x5, U_out, U_in x4[, psi0])."""
+    sblk = (1, 1, SPINOR_COMPS, Y, Xh)
+    gblk1 = (1, 1, 1, GAUGE_COMPS, Y, Xh)
+
+    def s(im):
+        return pl.BlockSpec(sblk, im)
+
+    def g(im):
+        return pl.BlockSpec(gblk1, im)
+
+    if halo:
+        # Arrays are halo-extended to (T+2, Z+2) in t/z; +1 recenters.
+        psi = [
+            s(lambda t, z: (t + 1, z + 1, 0, 0, 0)),
+            s(lambda t, z: (t + 1, z + 2, 0, 0, 0)),   # z+1
+            s(lambda t, z: (t + 1, z, 0, 0, 0)),       # z-1
+            s(lambda t, z: (t + 2, z + 1, 0, 0, 0)),   # t+1
+            s(lambda t, z: (t, z + 1, 0, 0, 0)),       # t-1
+        ]
+        u_in = [
+            g(lambda t, z: (0, t + 1, z + 1, 0, 0, 0)),  # x, center
+            g(lambda t, z: (1, t + 1, z + 1, 0, 0, 0)),  # y, center
+            g(lambda t, z: (2, t + 1, z, 0, 0, 0)),      # z, z-1
+            g(lambda t, z: (3, t, z + 1, 0, 0, 0)),      # t, t-1
+        ]
+    else:
+        psi = [
+            s(lambda t, z: (t, z, 0, 0, 0)),
+            s(lambda t, z: (t, (z + 1) % Zl, 0, 0, 0)),
+            s(lambda t, z: (t, (z - 1) % Zl, 0, 0, 0)),
+            s(lambda t, z: ((t + 1) % Tl, z, 0, 0, 0)),
+            s(lambda t, z: ((t - 1) % Tl, z, 0, 0, 0)),
+        ]
+        u_in = [
+            g(lambda t, z: (0, t, z, 0, 0, 0)),
+            g(lambda t, z: (1, t, z, 0, 0, 0)),
+            g(lambda t, z: (2, t, (z - 1) % Zl, 0, 0, 0)),
+            g(lambda t, z: (3, (t - 1) % Tl, z, 0, 0, 0)),
+        ]
+
+    par = pl.BlockSpec((1, 1), lambda t, z: (t, z), memory_space=pltpu.SMEM)
+    u_out = pl.BlockSpec((4, 1, 1, GAUGE_COMPS, Y, Xh),
+                         lambda t, z: (0, t, z, 0, 0, 0))
+    specs = [par] + psi + [u_out] + u_in
+    if with_axpy:
+        specs.append(s(lambda t, z: (t, z, 0, 0, 0)))
+    out = s(lambda t, z: (t, z, 0, 0, 0))
+    return specs, out
+
+
+def hop_block_planar(u_out_p: jnp.ndarray, u_in_p: jnp.ndarray,
+                     src_p: jnp.ndarray, out_parity: int, *,
+                     tz_offset: Tuple[int, int] = (0, 0),
+                     halo: bool = False,
+                     axpy: Optional[Tuple[float, jnp.ndarray]] = None,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Apply one hopping block in the planar layout via the Pallas kernel.
+
+    Args:
+      u_out_p: planar gauge at output-parity sites ``(4, T, Z, 18, Y, Xh)``
+        (never halo-extended).
+      u_in_p: planar gauge at source-parity sites; halo-extended to
+        ``(4, T+2, Z+2, ...)`` iff ``halo``.
+      src_p: planar source spinor ``(T, Z, 24, Y, Xh)``, halo-extended to
+        ``(T+2, Z+2, ...)`` iff ``halo``.
+      out_parity: parity of the *output* (ODD for ``H_oe``).
+      tz_offset: global (t0, z0) origin of this shard, for the parity mask.
+      halo: neighbor planes come from halo-extended arrays instead of
+        periodic wrap (the distributed path).
+      axpy: optional ``(coeff, psi0_p)`` fusing ``psi0 + coeff * hop``.
+      interpret: force/disable interpret mode (default: auto off-TPU).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Tl, Zl = ((src_p.shape[0] - 2, src_p.shape[1] - 2) if halo
+              else (src_p.shape[0], src_p.shape[1]))
+    _, Y, Xh = src_p.shape[2:]
+    t0, z0 = tz_offset
+
+    par = ((jnp.arange(Tl, dtype=jnp.int32)[:, None] + t0)
+           + (jnp.arange(Zl, dtype=jnp.int32)[None, :] + z0)) % 2
+
+    with_axpy = axpy is not None
+    in_specs, out_spec = _build_specs(Tl, Zl, Y, Xh, halo, with_axpy)
+    coeff = float(axpy[0]) if with_axpy else None
+
+    bytes_spinor = src_p.dtype.itemsize * SPINOR_COMPS * Y * Xh * Tl * Zl
+    bytes_gauge = u_out_p.dtype.itemsize * 4 * GAUGE_COMPS * Y * Xh * Tl * Zl
+    cost = pl.CostEstimate(
+        flops=HOP_FLOPS_PER_SITE * Tl * Zl * Y * Xh,
+        bytes_accessed=2 * bytes_spinor + 2 * bytes_gauge
+        + (bytes_spinor if with_axpy else 0),
+        transcendentals=0)
+
+    kernel = functools.partial(_hop_kernel, out_parity=out_parity,
+                               axpy_coeff=coeff)
+    operands = [par, src_p, src_p, src_p, src_p, src_p,
+                u_out_p, u_in_p, u_in_p, u_in_p, u_in_p]
+    if with_axpy:
+        operands.append(axpy[1])
+
+    fn = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((Tl, Zl, SPINOR_COMPS, Y, Xh),
+                                       src_p.dtype),
+        grid=(Tl, Zl),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        interpret=interpret,
+        cost_estimate=cost,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        name=f"wilson_hop_{'oe' if out_parity else 'eo'}",
+    )
+    return fn(*operands)

@@ -1,0 +1,636 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+os.environ["REPRO_TPU_FAITHFUL_DOT"] = "1"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell and record memory / flop / collective statistics.
+
+This is the proof that the distribution config is coherent: a sharding
+mismatch, an OOM at compile, or an unsupported collective fails the cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun               # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --qcd-only
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import mesh as mesh_lib
+from repro.launch import specs as specs_lib
+from repro.launch.sharding import ShardingPolicy
+from repro.models import steps as steps_lib
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "pred": 1, "s8": 1,
+                "u8": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo: str) -> Dict[str, Any]:
+    """Sum output bytes of every collective in the compiled module.
+
+    Uses the op *result* shape — for all-gather that is the gathered
+    size (bytes received per device), for reduce-scatter the scattered
+    size; a consistent per-device traffic proxy across op kinds.
+    """
+    by_kind: Dict[str, float] = {}
+    count = 0
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        _, shape_txt, kind = m.groups()
+        b = _shape_bytes(shape_txt)
+        by_kind[kind] = by_kind.get(kind, 0) + b
+        count += 1
+    return {"bytes_by_kind": by_kind,
+            "total_bytes": sum(by_kind.values()),
+            "n_ops": count}
+
+
+# ---------------------------------------------------------------------------
+# Probe-based exact accounting
+# ---------------------------------------------------------------------------
+# XLA's HLO cost analysis counts a while-loop body ONCE, ignoring the trip
+# count, so flop/collective numbers from the full (scanned) compile are
+# meaningless.  The dry-run therefore lowers two small UNROLLED probe
+# variants (1 and 2 layer-groups, no grad-accumulation loop, no kv-chunk
+# loop) whose cost analysis is exact, and scales:
+#
+#   group  = probe(2g) - probe(1g)        per-group, per-microbatch
+#   base   = probe(1g) - group            embed/head/loss/opt, per-micro
+#   total  = accum * (base_loss + n_groups * group) + opt_once
+#
+# For rwkv6 (the only arch with an inner sequence scan) probes run at a
+# reduced sequence length and scale linearly — every rwkv op is linear in
+# S at fixed chunk size.  The full compile is still performed for memory
+# analysis and SPMD coherence.
+
+
+def _probe_cfg(cfg: ModelConfig, groups: int) -> ModelConfig:
+    kw = {"n_layers": groups * (cfg.moe_every if cfg.moe else 1)}
+    if cfg.is_enc_dec:
+        kw["encoder_layers"] = groups
+    return cfg.scaled(**kw)
+
+
+def _probe_stats(jfn, args) -> Dict[str, Any]:
+    from repro.models import scan_util
+    with _unrolled():
+        lowered = jfn.lower(*args)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    coll = collective_stats(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll": coll["total_bytes"],
+            "coll_by_kind": coll["bytes_by_kind"]}
+
+
+def _unrolled():
+    from repro.models.scan_util import unroll_scans
+    return unroll_scans()
+
+
+def _combine(p1: Dict, p2: Dict, n_groups: int, accum: int = 1,
+             seq_scale: float = 1.0) -> Dict[str, Any]:
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        group = max(0.0, p2[k] - p1[k])
+        base = max(0.0, p1[k] - group)
+        out[k] = (base + n_groups * group) * accum * seq_scale
+    kinds = set(p1["coll_by_kind"]) | set(p2["coll_by_kind"])
+    out["coll_by_kind"] = {}
+    for kind in kinds:
+        a, b = p1["coll_by_kind"].get(kind, 0), p2["coll_by_kind"].get(kind, 0)
+        group = max(0.0, b - a)
+        base = max(0.0, a - group)
+        out["coll_by_kind"][kind] = (base + n_groups * group) * accum \
+            * seq_scale
+    return out
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _accum_steps(policy: ShardingPolicy, global_batch: int,
+                 target_local: int = 4) -> int:
+    dp = 1
+    for a in policy.batch_spec(global_batch):
+        dp *= policy.mesh.shape[a]
+    local = max(1, global_batch // dp)
+    accum = max(1, local // target_local)
+    while global_batch % (accum * dp) != 0 and accum > 1:
+        accum -= 1
+    return accum
+
+
+def _attn_constraint(cfg: ModelConfig, policy: ShardingPolicy, mesh,
+                     batch: int):
+    """Head-parallel attention pin: q/out (B,S,H,hd) shard H over model,
+    k/v (B,S,K,hd) shard K when divisible.  Prevents XLA from picking a
+    layout that materializes replicated (H,S,S) score tensors.
+
+    Decode special case: when the KV cache is hd-sharded (K % tp != 0),
+    head-sharded q forces a per-step all-gather of the whole cache.
+    Sharding q/out on hd instead keeps the cache resident and turns the
+    mismatch into a small f32 score all-reduce (flash-decoding style)."""
+    msize = mesh.shape["model"]
+    b = policy.batch_spec(batch)
+    kv_mismatch = cfg.n_kv_heads % msize != 0
+
+    def fn(x, kind):
+        if x.ndim != 4:
+            return x
+        S, heads, hd = x.shape[1], x.shape[2], x.shape[3]
+        decode = S == 1
+        if decode and kv_mismatch and hd % msize == 0 and hd >= msize:
+            spec = P(b, None, None, "model")
+        elif heads % msize == 0 and heads >= msize:
+            spec = P(b, None, "model", None)
+        elif kind == "q" and hd % msize == 0 and hd >= msize:
+            spec = P(b, None, None, "model")
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return fn
+
+
+def _with_ctx(fn, ctx_factory):
+    """Wrap a step fn so a context manager is active during tracing."""
+    def wrapped(*a, **k):
+        with ctx_factory():
+            return fn(*a, **k)
+    return wrapped
+
+
+def build_lm_lowering(cfg: ModelConfig, cell, mesh, *,
+                      seq_shard: bool = True, accum: Optional[int] = None,
+                      kv_chunk_prefill: int = 256,
+                      opt_level: int = 1):
+    """``opt_level=0`` is the pre-hillclimb baseline (global-token MoE
+    routing, vocab FSDP, head-sharded decode q); ``1`` applies the
+    optimizations recorded in EXPERIMENTS.md §Perf."""
+    from repro.models import layers as layers_lib
+
+    fsdp_axis = "data"
+    serve_dtype = None
+    if opt_level >= 1:
+        if cfg.moe and cell.kind in ("train", "prefill"):
+            dp_total = 1
+            for a in mesh_lib.dp_axes(mesh):
+                dp_total *= mesh.shape[a]
+            cfg = cfg.scaled(route_groups=dp_total)
+        if cell.kind == "decode":
+            # weight-resident serving: bf16 params, TP-only when they fit
+            serve_dtype = jnp.bfloat16
+            if cfg.param_count() * 2 / mesh.shape["model"] < 12e9:
+                fsdp_axis = None
+
+    policy = ShardingPolicy(mesh, seq_shard_activations=seq_shard,
+                            fsdp_axis=fsdp_axis,
+                            vocab_fsdp=(opt_level == 0))
+    params = specs_lib.params_shapes(cfg)
+    pspecs = policy.param_specs(params)
+    psh = policy.named(pspecs)
+    attn_fn = _attn_constraint(cfg, policy, mesh, cell.global_batch)
+
+    def attn_ctx():
+        return layers_lib.attention_constraint(attn_fn)
+
+    if cell.kind == "train":
+        opt = adamw.AdamW()
+        opt_shapes = jax.eval_shape(opt.init, params)
+        osh = adamw.OptState(
+            m=policy.named(pspecs), v=policy.named(pspecs),
+            count=NamedSharding(mesh, P()))
+        batch = specs_lib.batch_specs(cfg, cell.global_batch, cell.seq_len)
+        bsh = {k: NamedSharding(mesh, s)
+               for k, s in policy.data_spec(batch).items()}
+        # bigger models get smaller microbatches (activation memory)
+        target = 1 if cfg.param_count() > 2e10 else 4
+        a = accum if accum is not None else _accum_steps(
+            policy, cell.global_batch, target_local=target)
+        micro_b = cell.global_batch // a
+        act = policy.activation_spec(micro_b, cell.seq_len)
+
+        def constraint(x):
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, act))
+
+        def grad_constraint(grads):
+            if opt_level == 0:
+                return grads
+            gspecs = policy.param_specs(grads)
+            return jax.tree_util.tree_map(
+                lambda g, sp: jax.lax.with_sharding_constraint(
+                    g, NamedSharding(mesh, sp)), grads, gspecs)
+
+        fn = steps_lib.make_train_step(cfg, opt, remat=True, accum_steps=a,
+                                       constraint_fn=constraint,
+                                       grad_constraint_fn=grad_constraint)
+        fn = _with_ctx(fn, attn_ctx)
+        step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        jfn = jax.jit(fn,
+                      in_shardings=(psh, osh, bsh,
+                                    NamedSharding(mesh, P())),
+                      out_shardings=(psh, osh, None),
+                      donate_argnums=(0, 1))
+        return jfn, (params, opt_shapes, batch, step_sds), {"accum": a}
+
+    if cell.kind == "prefill":
+        batch = specs_lib.batch_specs(cfg, cell.global_batch, cell.seq_len)
+        bsh = {k: NamedSharding(mesh, s)
+               for k, s in policy.data_spec(batch).items()}
+        fn = steps_lib.make_prefill_step(cfg, cell.seq_len,
+                                         kv_chunk=kv_chunk_prefill)
+        fn = _with_ctx(fn, attn_ctx)
+        cache_sds = specs_lib.cache_shapes(cfg, cell.global_batch,
+                                           cell.seq_len)
+        csh = policy.named(policy.cache_specs(cfg, cache_sds))
+        jfn = jax.jit(fn, in_shardings=(psh, bsh),
+                      out_shardings=(None, csh, None))
+        return jfn, (params, batch), {}
+
+    # decode
+    if serve_dtype is not None:
+        params = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, serve_dtype)
+            if x.dtype == jnp.float32 else x, params)
+        psh = policy.named(policy.param_specs(params))
+    cache_sds, tok_sds, idx_sds = specs_lib.decode_specs(cfg, cell)
+    csh = policy.named(policy.cache_specs(cfg, cache_sds))
+    tsh = NamedSharding(mesh, P(policy.batch_spec(cell.global_batch), None))
+    fn = _with_ctx(steps_lib.make_serve_step(cfg), attn_ctx)
+    jfn = jax.jit(fn,
+                  in_shardings=(psh, csh, tsh, NamedSharding(mesh, P())),
+                  out_shardings=(tsh, None, csh),
+                  donate_argnums=(1,))
+    return jfn, (params, cache_sds, tok_sds, idx_sds), {}
+
+
+def scan_aware_collectives(hlo: str, n_groups: int) -> Dict[str, Any]:
+    """Collective bytes of a compiled module with ONE level of while
+    loops, all assumed to be the layer scan (true for decode graphs):
+    entry collectives count once, loop-body collectives x ``n_groups``.
+
+    Used for decode cells where unrolled probes are unreliable: XLA picks
+    different (gather-happy) strategies for 2-4 unrolled layers than for
+    the actual scanned graph, so the scanned body is the ground truth.
+    """
+    comps = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{", line)
+        if m and not line.startswith(" "):
+            cur = m.group(1)
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+    body_names = set()
+    for line in hlo.splitlines():
+        m = re.search(r"body=%?([\w\.\-]+)", line)
+        if m:
+            body_names.add(m.group(1))
+
+    def comp_coll(name):
+        by = {}
+        for line in comps.get(name, []):
+            m = _COLL_RE.search(line)
+            if m:
+                _, shape_txt, kind = m.groups()
+                by[kind] = by.get(kind, 0) + _shape_bytes(shape_txt)
+        return by
+
+    total = {}
+    for name in comps:
+        mult = n_groups if name in body_names else 1
+        for k, v in comp_coll(name).items():
+            total[k] = total.get(k, 0) + mult * v
+    return {"bytes_by_kind": total, "total_bytes": sum(total.values())}
+
+
+def probe_lm(cfg: ModelConfig, cell, mesh, *, seq_shard: bool,
+             accum: int) -> Dict[str, Any]:
+    """Exact per-device flop/byte/collective totals via unrolled probes."""
+    seq_scale = 1.0
+    cellp = cell
+    if cfg.attention == "none" and cell.kind in ("train", "prefill") \
+            and cell.seq_len > 2048:
+        # rwkv: linear in S at fixed chunk; probe short, scale up
+        seq_scale = cell.seq_len / 2048
+        cellp = dataclasses.replace(cellp, seq_len=2048)
+    if cell.kind == "train":
+        cellp = dataclasses.replace(cellp,
+                                    global_batch=cell.global_batch // accum)
+    stats = []
+    pair = (2, 3) if cell.kind == "decode" else (1, 2)
+    for g in pair:
+        pc = _probe_cfg(cfg, g)
+        jfn, sds, _ = build_lm_lowering(pc, cellp, mesh,
+                                        seq_shard=seq_shard,
+                                        accum=1, kv_chunk_prefill=0)
+        stats.append(_probe_stats(jfn, sds))
+    n_groups = cfg.n_layers // (cfg.moe_every if cfg.moe else 1)
+    # with pair (a, b): group = b - a; base = a - pair[0]*group
+    out = {}
+    a, bst = stats
+    for k in ("flops", "bytes", "coll"):
+        group = max(0.0, bst[k] - a[k]) / (pair[1] - pair[0])
+        base = max(0.0, a[k] - pair[0] * group)
+        out[k] = (base + n_groups * group) * \
+            (accum if cell.kind == "train" else 1) * seq_scale
+    kinds = set(a["coll_by_kind"]) | set(bst["coll_by_kind"])
+    out["coll_by_kind"] = {}
+    for kind in kinds:
+        x, y = a["coll_by_kind"].get(kind, 0), \
+            bst["coll_by_kind"].get(kind, 0)
+        group = max(0.0, y - x) / (pair[1] - pair[0])
+        base = max(0.0, x - pair[0] * group)
+        out["coll_by_kind"][kind] = (base + n_groups * group) * \
+            (accum if cell.kind == "train" else 1) * seq_scale
+    return out
+
+
+def model_flops(cfg: ModelConfig, cell) -> float:
+    n_active = cfg.param_count(active_only=True)
+    if cell.kind == "train":
+        return 6.0 * n_active * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n_active * cell.global_batch * cell.seq_len
+    return 2.0 * n_active * cell.global_batch  # decode: one token
+
+
+# ---------------------------------------------------------------------------
+# QCD cells (the paper's own operator on the production mesh)
+# ---------------------------------------------------------------------------
+
+def build_qcd_lowering(lat, mesh, *, backend: str = "jnp",
+                       overlap: str = "fused", hoist_gauge: bool = False,
+                       dtype=jnp.float32):
+    from repro.distributed import qcd as qcd_lib
+
+    part = qcd_lib.QCDPartition.for_mesh(mesh, backend=backend,
+                                         overlap=overlap, interpret=True,
+                                         hoist_gauge=hoist_gauge)
+    T, Z, Y, X = lat.shape
+    Xh = X // 2
+    ext = 2 if hoist_gauge else 0
+    spin = jax.ShapeDtypeStruct((T, Z, 24, Y, Xh), dtype)
+    # pre-extended gauge: per-shard halos -> global T/Z dims grow by
+    # 2 * (number of shards along the axis)
+    tsh = mesh_lib.axis_size(mesh, part.t_axes) if hoist_gauge else 0
+    zsh = mesh_lib.axis_size(mesh, part.z_axes) if hoist_gauge else 0
+    gauge = jax.ShapeDtypeStruct(
+        (4, T + 2 * tsh, Z + 2 * zsh, 18, Y, Xh), dtype)
+    dhat = qcd_lib.make_dhat_fn(part, lat.kappa)
+    jfn = jax.jit(dhat,
+                  in_shardings=(part.gauge_sharding(), part.gauge_sharding(),
+                                part.spinor_sharding()),
+                  out_shardings=part.spinor_sharding())
+    return jfn, (gauge, gauge, spin)
+
+
+def qcd_model_flops(lat) -> float:
+    T, Z, Y, X = lat.shape
+    V = T * Z * Y * X
+    return 1320.0 * V + 24.0 * V / 2  # two eo hop blocks + fused axpy
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_cell(name: str, jfn, args, extra: Dict[str, Any],
+             n_devices: int) -> Dict[str, Any]:
+    t0 = time.time()
+    lowered = jfn.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    coll = collective_stats(hlo_text)
+    rec = {
+        "cell": name,
+        "status": "ok",
+        "n_devices": n_devices,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "flops_per_device": float(ca.get("flops", -1)),
+        "bytes_accessed_per_device": float(ca.get("bytes accessed", -1)),
+        "arg_bytes_per_device": int(ma.argument_size_in_bytes),
+        "out_bytes_per_device": int(ma.output_size_in_bytes),
+        "temp_bytes_per_device": int(ma.temp_size_in_bytes),
+        "peak_bytes_per_device": int(getattr(ma, "peak_memory_in_bytes", 0)),
+        "alias_bytes_per_device": int(ma.alias_size_in_bytes),
+        "fit_bytes_per_device": int(ma.argument_size_in_bytes
+                                    + ma.output_size_in_bytes
+                                    + ma.temp_size_in_bytes
+                                    - ma.alias_size_in_bytes),
+        "collectives": coll,
+        "_hlo": hlo_text,
+        **extra,
+    }
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'all', or comma list")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--qcd", action="store_true", default=True)
+    ap.add_argument("--no-qcd", dest="qcd", action="store_false")
+    ap.add_argument("--qcd-only", action="store_true")
+    ap.add_argument("--lm-seq-shard", type=int, default=1)
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = {"single": False, "multi": True}
+    if args.mesh != "both":
+        meshes = {args.mesh: meshes[args.mesh]}
+
+    results = []
+
+    def record(rec, fname):
+        rec.pop("_hlo", None)
+        results.append(rec)
+        (out_dir / fname).write_text(json.dumps(rec, indent=2))
+        status = rec["status"]
+        extra = ("" if status != "ok" else
+                 f" flops/dev={rec['flops_per_device']:.3e}"
+                 f" fit={rec['fit_bytes_per_device']/2**30:.2f}GiB"
+                 f" coll={rec['collectives']['total_bytes']/2**20:.1f}MiB"
+                 f" compile={rec['compile_s']:.1f}s")
+        print(f"[{status:>4s}] {rec['cell']}{extra}", flush=True)
+
+    if not args.qcd_only:
+        arch_list = (list(configs.ARCH_NAMES) if args.arch == "all"
+                     else args.arch.split(","))
+        for arch in arch_list:
+            cfg = configs.get(arch)
+            for cell, skip in configs.shapes_for(cfg):
+                if args.shape != "all" and cell.name not in \
+                        args.shape.split(","):
+                    continue
+                for mname, multi in meshes.items():
+                    cname = f"{arch}__{cell.name}__{mname}"
+                    fname = f"{cname.replace('/', '_')}.json"
+                    if skip:
+                        record({"cell": cname, "status": "skip",
+                                "reason": skip}, fname)
+                        continue
+                    mesh = mesh_lib.make_production_mesh(multi_pod=multi)
+                    try:
+                        jfn, sds, extra = build_lm_lowering(
+                            cfg, cell, mesh,
+                            seq_shard=bool(args.lm_seq_shard))
+                        rec = run_cell(cname, jfn, sds, extra,
+                                       mesh.devices.size)
+                        rec["model_flops_global"] = model_flops(cfg, cell)
+                        rec["kind"] = cell.kind
+                        rec["arch"] = arch
+                        rec["shape"] = cell.name
+                        rec["mesh"] = mname
+                        try:
+                            probe = probe_lm(
+                                cfg, cell, mesh,
+                                seq_shard=bool(args.lm_seq_shard),
+                                accum=rec.get("accum", 1))
+                            rec["exact"] = probe
+                            if cell.kind == "decode":
+                                # unrolled probes over-gather vs the real
+                                # scanned graph; use the scan body itself
+                                ng = cfg.n_layers // (cfg.moe_every
+                                                      if cfg.moe else 1)
+                                sc = scan_aware_collectives(
+                                    rec.pop("_hlo", ""), ng) \
+                                    if "_hlo" in rec else None
+                                if sc and sc["total_bytes"] > 0:
+                                    rec["exact"]["coll"] = \
+                                        sc["total_bytes"]
+                                    rec["exact"]["coll_by_kind"] = \
+                                        sc["bytes_by_kind"]
+                        except Exception as e:  # noqa: BLE001
+                            rec["probe_error"] = \
+                                f"{type(e).__name__}: {e}"
+                    except Exception as e:  # noqa: BLE001
+                        rec = {"cell": cname, "status": "fail",
+                               "error": f"{type(e).__name__}: {e}",
+                               "trace": traceback.format_exc()[-2000:]}
+                    record(rec, fname)
+
+    if args.qcd or args.qcd_only:
+        for lat_name in ("wilson-production",) if not args.qcd_only else \
+                tuple(configs.QCD_CONFIGS):
+            lat = configs.get_qcd(lat_name)
+            variants = {
+                "fused": dict(overlap="fused"),
+                "split": dict(overlap="split"),
+                "planar": dict(backend="jnp_planar"),
+                "opt": dict(backend="jnp_planar", hoist_gauge=True),
+                "opt-bf16": dict(backend="jnp_planar", hoist_gauge=True,
+                                 dtype=jnp.bfloat16),
+            }
+            for mname, multi in meshes.items():
+                for overlap, vkw in variants.items():
+                    cname = f"{lat_name}__dhat-{overlap}__{mname}"
+                    fname = f"{cname}.json"
+                    mesh = mesh_lib.make_production_mesh(multi_pod=multi)
+                    # divisibility: T over (pod,data), Z over model
+                    tsh = mesh_lib.axis_size(
+                        mesh, tuple(a for a in ("pod", "data")
+                                    if a in mesh.axis_names))
+                    zsh = mesh_lib.axis_size(mesh, ("model",))
+                    T, Z = lat.shape[0], lat.shape[1]
+                    skip = None
+                    if T % tsh or Z % zsh:
+                        skip = (f"lattice T={T},Z={Z} not divisible by "
+                                f"mesh shards ({tsh},{zsh}); paper volumes "
+                                "are per-node, run them on smaller meshes")
+                    elif vkw.get("overlap") == "split" and                             (T // tsh < 2 or Z // zsh < 2):
+                        skip = "split overlap needs local T,Z >= 2"
+                    if skip:
+                        record({"cell": cname, "status": "skip",
+                                "reason": skip}, fname)
+                        continue
+                    try:
+                        jfn, sds = build_qcd_lowering(lat, mesh, **vkw)
+                        rec = run_cell(cname, jfn, sds, {},
+                                       mesh.devices.size)
+                        rec["model_flops_global"] = qcd_model_flops(lat)
+                        rec["kind"] = "qcd"
+                        rec["arch"] = lat_name
+                        rec["shape"] = f"dhat-{overlap}"
+                        rec["mesh"] = mname
+                        # loop-free graph: raw cost analysis is exact
+                        rec["exact"] = {
+                            "flops": rec["flops_per_device"],
+                            "bytes": rec["bytes_accessed_per_device"],
+                            "coll": rec["collectives"]["total_bytes"],
+                            "coll_by_kind":
+                                rec["collectives"]["bytes_by_kind"],
+                        }
+                    except Exception as e:  # noqa: BLE001
+                        rec = {"cell": cname, "status": "fail",
+                               "error": f"{type(e).__name__}: {e}",
+                               "trace": traceback.format_exc()[-2000:]}
+                    record(rec, fname)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skip, {n_fail} fail "
+          f"of {len(results)} cells")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,63 @@
+"""Device meshes for the production dry-run and elastic re-meshing.
+
+All constructors are functions (never module-level constants) so importing
+this module touches no jax device state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips).
+
+    Uses the first prod(shape) devices so the single-pod mesh also works
+    in a 512-device dry-run process.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "for the dry-run")
+    arr = np.asarray(devs[:n], dtype=object).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def elastic_mesh(n_devices: Optional[int] = None,
+                 max_model: int = 16) -> Mesh:
+    """Re-derive a legal (data, model) mesh from a surviving device count.
+
+    Fault-tolerance helper: after losing nodes, pick the largest
+    power-of-two model axis <= max_model that divides the device count and
+    put the rest on data.  Single device degrades to (1, 1).
+    """
+    devs = jax.devices()
+    n = n_devices if n_devices is not None else len(devs)
+    model = 1
+    while model * 2 <= max_model and n % (model * 2) == 0:
+        model *= 2
+    data = n // model
+    arr = np.asarray(devs[:n], dtype=object).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,127 @@
+"""Roofline analysis over the dry-run records.
+
+Per (arch x shape x mesh) cell, from the probe-exact per-device numbers:
+
+  compute term     = flops_per_device / peak_flops          [s]
+  memory term      = bytes_per_device / hbm_bw              [s]
+  collective term  = collective_bytes_per_device / ici_bw   [s]
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per instructions).  The dominant term is the bottleneck; the
+roofline fraction reported in EXPERIMENTS.md §Perf is
+``compute_term / max(all three)`` (1.0 = compute-bound at peak).
+
+``MODEL_FLOPS / HLO_FLOPS`` measures how much compiled compute is useful
+(catches remat/redundancy waste): for training with full remat the
+expected value is ~6/8 = 0.75.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+prints the table and writes experiments/roofline.csv / .md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (approx, one direction)
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments"
+
+
+def analyze(rec: Dict) -> Dict:
+    if rec.get("status") != "ok" or "exact" not in rec:
+        return {}
+    e = rec["exact"]
+    n_dev = rec["n_devices"]
+    t_compute = e["flops"] / PEAK_FLOPS
+    t_memory = e["bytes"] / HBM_BW
+    t_coll = e["coll"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    model_flops_dev = rec.get("model_flops_global", 0) / n_dev
+    return {
+        "cell": rec["cell"],
+        "arch": rec.get("arch", "?"),
+        "shape": rec.get("shape", "?"),
+        "mesh": rec.get("mesh", "?"),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": t_compute / t_bound if t_bound else 0.0,
+        "model_flops_per_device": model_flops_dev,
+        "useful_flops_ratio": (model_flops_dev / e["flops"]
+                               if e["flops"] else 0.0),
+        "fit_gib": rec.get("fit_bytes_per_device", 0) / 2 ** 30,
+        "step_time_bound_s": t_bound,
+        "chip_seconds": t_bound * n_dev,
+    }
+
+
+def load_records(d: pathlib.Path) -> List[Dict]:
+    recs = []
+    for f in sorted(d.glob("*.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def fmt_row(a: Dict) -> str:
+    return (f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['t_compute_s']*1e3:.2f} | {a['t_memory_s']*1e3:.2f} "
+            f"| {a['t_collective_s']*1e3:.2f} | {a['dominant']} "
+            f"| {a['roofline_fraction']:.3f} "
+            f"| {a['useful_flops_ratio']:.2f} | {a['fit_gib']:.1f} |")
+
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | coll ms "
+          "| dominant | roofline frac | useful/HLO | fit GiB |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(OUT_DIR / "dryrun"))
+    args = ap.parse_args(argv)
+    recs = load_records(pathlib.Path(args.dir))
+    rows, skips, fails = [], [], []
+    for r in recs:
+        if r.get("status") == "skip":
+            skips.append(r)
+        elif r.get("status") == "fail":
+            fails.append(r)
+        else:
+            a = analyze(r)
+            if a:
+                rows.append(a)
+    rows.sort(key=lambda a: (a["arch"], a["shape"], a["mesh"]))
+    print(HEADER)
+    for a in rows:
+        print(fmt_row(a))
+    print(f"\n{len(rows)} analyzed, {len(skips)} skipped, "
+          f"{len(fails)} failed")
+    for s in skips:
+        print(f"  skip: {s['cell']}: {s['reason']}")
+    for f in fails:
+        print(f"  FAIL: {f['cell']}: {f.get('error', '?')[:120]}")
+
+    out = OUT_DIR / "roofline.md"
+    body = [HEADER] + [fmt_row(a) for a in rows]
+    out.write_text("\n".join(body) + "\n")
+    csv = OUT_DIR / "roofline.csv"
+    keys = list(rows[0].keys()) if rows else []
+    with csv.open("w") as fh:
+        fh.write(",".join(keys) + "\n")
+        for a in rows:
+            fh.write(",".join(str(a[k]) for k in keys) + "\n")
+    print(f"wrote {out} and {csv}")
+
+
+if __name__ == "__main__":
+    main()

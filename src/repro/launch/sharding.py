@@ -1,0 +1,219 @@
+"""Sharding policy: FSDP x TP PartitionSpecs for every parameter, cache
+and activation in the system, with divisibility-checked fallbacks.
+
+Rules (Megatron-style column/row pattern + FSDP):
+
+* "column" weights (qkv/up projections) shard their output dim over
+  ``model``; "row" weights (wo/down projections) shard their input dim —
+  one all-reduce per block instead of per matmul.
+* the other large dim shards over ``data`` (FSDP; XLA all-gathers per
+  layer under the scan, which is exactly FSDP's schedule).
+* a dim is only sharded if it divides the axis size (GSPMD rejects uneven
+  shardings at jit boundaries); fallbacks go to the next-best dim or to
+  replication.  Head-count indivisibility (minicpm3 40H, hymba 25H vs
+  TP=16) is irrelevant here because feature dims, not head counts, are
+  sharded.
+* ``pod`` is pure data parallelism (params replicated across pods).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from . import mesh as mesh_lib
+
+# param name -> which dim (from the end, ignoring stack dims) is TP-sharded
+_COL = {"wq", "wk", "wv", "wg", "w1", "w3", "wq_a", "wq_b", "wkv_a",
+        "wkv_b", "in_proj", "x_proj", "dt_proj", "wr"}
+_ROW = {"wo", "w2", "out_proj"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    model_axis: str = "model"
+    fsdp_axis: Optional[str] = "data"
+    seq_shard_activations: bool = True
+    # FSDP on the embedding/lm_head non-vocab dim costs a (D, V/tp)
+    # all-gather per microbatch; off by default (replicating the non-TP
+    # dim of the vocab matrices is cheap relative to that traffic)
+    vocab_fsdp: bool = False
+
+    @property
+    def dp(self) -> Tuple[str, ...]:
+        return mesh_lib.dp_axes(self.mesh)
+
+    def _model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    def _fsdp_size(self) -> int:
+        return self.mesh.shape[self.fsdp_axis] if self.fsdp_axis else 1
+
+    # -- parameters ------------------------------------------------------
+    def param_spec(self, path: Tuple[str, ...], shape: Tuple[int, ...]) -> P:
+        name = path[-1] if path else ""
+        if name == "w" and len(path) >= 2:
+            name = path[-2]
+        nd = len(shape)
+        if nd <= 1 or min(shape) == 0:
+            return P()
+        # embedding / head
+        if name == "embed":
+            # shard D (not V): jnp.take over a vocab-sharded table forces
+            # a full-table all-gather per microbatch; D-sharded lookups
+            # stay local (each device gathers its feature slice)
+            return self._matrix_spec(shape, tp_dim=1,
+                                     fsdp_dim=0 if self.vocab_fsdp else None,
+                                     offset=0)
+        if name == "lm_head":
+            return self._matrix_spec(shape, tp_dim=1,
+                                     fsdp_dim=0 if self.vocab_fsdp else None,
+                                     offset=0)
+        # stacked layer params carry 1 (layers) or 2 (groups) leading dims:
+        # treat all but the trailing 2 dims as stack dims.
+        offset = nd - 2
+        if name in _ROW:
+            return self._matrix_spec(shape, tp_dim=0, fsdp_dim=1,
+                                     offset=offset)
+        if name in _COL:
+            return self._matrix_spec(shape, tp_dim=1, fsdp_dim=0,
+                                     offset=offset)
+        if name in ("router",):
+            return self._matrix_spec(shape, tp_dim=None, fsdp_dim=0,
+                                     offset=offset)
+        if nd - offset >= 2:
+            # expert tensors (E, D, F) etc.: handled via offset+explicit
+            return self._matrix_spec(shape, tp_dim=1, fsdp_dim=0,
+                                     offset=offset)
+        return P()
+
+    def _matrix_spec(self, shape, tp_dim: Optional[int],
+                     fsdp_dim: Optional[int], offset: int) -> P:
+        """Spec for the trailing matrix dims of ``shape`` after ``offset``
+        stack dims (stack dims are never sharded)."""
+        nd = len(shape)
+        spec = [None] * nd
+        msize, fsize = self._model_size(), self._fsdp_size()
+        if tp_dim is not None:
+            d = offset + tp_dim
+            if d < nd and shape[d] % msize == 0 and shape[d] >= msize:
+                spec[d] = self.model_axis
+            else:  # fallback: other matrix dim
+                d2 = offset + (1 - tp_dim)
+                if d2 < nd and spec[d2] is None and shape[d2] % msize == 0 \
+                        and shape[d2] >= msize:
+                    spec[d2] = self.model_axis
+        if self.fsdp_axis and fsdp_dim is not None:
+            d = offset + fsdp_dim
+            if d < nd and spec[d] is None and shape[d] % fsize == 0 \
+                    and shape[d] >= fsize:
+                spec[d] = self.fsdp_axis
+            else:
+                d2 = offset + (1 - fsdp_dim)
+                if d2 < nd and spec[d2] is None and shape[d2] % fsize == 0 \
+                        and shape[d2] >= fsize:
+                    spec[d2] = self.fsdp_axis
+        return P(*spec)
+
+    def param_specs(self, params_shapes) -> Any:
+        """Tree of PartitionSpecs matching a tree of ShapeDtypeStructs."""
+        def one(path, leaf):
+            names = tuple(_key_name(k) for k in path)
+            return self.param_spec(names, leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+    # -- batch / activations ---------------------------------------------
+    def batch_spec(self, batch_size: int) -> Tuple[str, ...]:
+        """Axes to shard the batch dim over (largest divisible prefix)."""
+        axes = []
+        n = 1
+        for a in self.dp:
+            if batch_size % (n * self.mesh.shape[a]) == 0:
+                axes.append(a)
+                n *= self.mesh.shape[a]
+        return tuple(axes)
+
+    def data_spec(self, batch: Dict[str, Any]) -> Dict[str, P]:
+        out = {}
+        for k, v in batch.items():
+            b = self.batch_spec(v.shape[0])
+            out[k] = P(b, *([None] * (v.ndim - 1)))
+        return out
+
+    def activation_spec(self, batch_size: int, seq_len: int) -> P:
+        """Residual-stream constraint (B, S, D): DP batch + sequence
+        sharding over the model axis (Megatron sequence parallelism) —
+        bounds the remat-carry memory of deep models."""
+        b = self.batch_spec(batch_size)
+        if self.seq_shard_activations and seq_len % self._model_size() == 0 \
+                and seq_len >= self._model_size():
+            return P(b, self.model_axis, None)
+        return P(b, None, None)
+
+    # -- caches ------------------------------------------------------------
+    def cache_spec(self, cfg: ModelConfig, name: str,
+                   shape: Tuple[int, ...]) -> P:
+        msize = self._model_size()
+        batch = shape[1]
+        b = self.batch_spec(batch)
+        if name in ("k", "v", "xk", "xv"):     # (L, B, K, S, hd)
+            K, hd = shape[2], shape[4]
+            if K % msize == 0:
+                return P(None, b, self.model_axis, None, None)
+            if hd % msize == 0:
+                return P(None, b, None, None, self.model_axis)
+            return P(None, b, None, None, None)
+        if name == "ckv":                       # (L, B, S, kv_rank)
+            r = shape[3]
+            tp = self.model_axis if r % msize == 0 else None
+            return P(None, b, None, tp)
+        if name == "krope":
+            r = shape[3]
+            tp = self.model_axis if r % msize == 0 else None
+            return P(None, b, None, tp)
+        if name == "s":                         # (L, B, H, hd, hd)
+            H = shape[2]
+            tp = self.model_axis if H % msize == 0 else None
+            return P(None, b, tp, None, None)
+        if name in ("h", "conv"):               # (L, B, ..., d_inner[, ds])
+            di_dim = 2 if name == "h" else 3
+            di = shape[di_dim]
+            spec = [None] * len(shape)
+            spec[1] = b
+            if di % msize == 0:
+                spec[di_dim] = self.model_axis
+            return P(*spec)
+        if name in ("x_tm", "x_cm"):            # (L, B, D)
+            D = shape[2]
+            tp = self.model_axis if D % msize == 0 else None
+            return P(None, b, tp)
+        return P(*([None] * len(shape)))
+
+    def cache_specs(self, cfg: ModelConfig, cache_shapes) -> Any:
+        def one(path, leaf):
+            name = _key_name(path[-1])
+            return self.cache_spec(cfg, name, leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+    # -- helpers -----------------------------------------------------------
+    def named(self, spec_tree) -> Any:
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda s: isinstance(s, P))
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "name"):
+        return str(k.name)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, cell)`` returns the abstract inputs for one
+(architecture x shape) cell; frontends are stubs, so vision/audio inputs
+are precomputed embeddings of the documented sizes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCell
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, SDS]:
+    """Training/prefill batch: tokens + mask (+ stub frontend embeddings).
+
+    For VLM the text length shrinks so prefix + text == seq (keeps cell
+    cost comparable across archs); for audio enc-dec the encoder sees
+    seq/4 frame embeddings (typical 4x pre-downsampled speech frontend).
+    """
+    out: Dict[str, SDS] = {}
+    text = seq
+    if cfg.modality == "vision" and cfg.num_prefix_embeds:
+        text = seq - cfg.num_prefix_embeds
+        out["prefix_embeds"] = SDS((batch, cfg.num_prefix_embeds,
+                                    cfg.d_model), jnp.bfloat16)
+    if cfg.is_enc_dec:
+        out["enc_embeds"] = SDS((batch, max(seq // 4, 16), cfg.d_model),
+                                jnp.bfloat16)
+    out["tokens"] = SDS((batch, text), jnp.int32)
+    out["mask"] = SDS((batch, text), jnp.float32)
+    return out
+
+
+def params_shapes(cfg: ModelConfig) -> Any:
+    key = SDS((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(model_lib.init_params, cfg), key)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> Any:
+    enc_len = max(max_len // 4, 16) if cfg.is_enc_dec else 0
+    return jax.eval_shape(
+        functools.partial(model_lib.init_cache, cfg, batch, max_len,
+                          enc_len))
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell
+                 ) -> Tuple[Any, SDS, SDS]:
+    """(cache, tokens, index) for one serve step at a full cache."""
+    cache = cache_shapes(cfg, cell.global_batch, cell.seq_len)
+    tokens = SDS((cell.global_batch, 1), jnp.int32)
+    index = SDS((), jnp.int32)
+    return cache, tokens, index

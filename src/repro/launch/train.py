@@ -1,0 +1,158 @@
+"""LM training driver with checkpoint/restart fault tolerance.
+
+Usage (CPU-scale example; the same driver pjit-scales on a real mesh):
+
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+      --scale 0.05 --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ck
+
+Fault tolerance:
+* saves atomic last-k checkpoints (params, opt state, data cursor) every
+  ``--ckpt-every`` steps, async;
+* on start, resumes from the latest checkpoint if present (``--fresh`` to
+  ignore), replaying the deterministic data stream from the saved cursor;
+* ``--mesh elastic`` re-derives the mesh from whatever devices are alive
+  (restore reshards via device_put).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.checkpoint.ckpt import Checkpointer
+from repro.data.pipeline import DataConfig, host_slice, make_source
+from repro.launch import mesh as mesh_lib
+from repro.launch.sharding import ShardingPolicy
+from repro.models import model as model_lib
+from repro.models import steps as steps_lib
+from repro.optim import adamw
+
+
+def scaled_config(name: str, scale: float):
+    """Shrink a published config by ``scale`` for local runs (keeps the
+    family: attention flavor, MoE layout, etc.)."""
+    cfg = configs.get(name)
+    if scale >= 1.0:
+        return cfg
+    d = max(64, int(cfg.d_model * scale) // 16 * 16)
+    heads = max(2, int(cfg.n_heads * scale))
+    hd = max(16, d // heads // 8 * 8)
+    kv = max(1, min(cfg.n_kv_heads, heads))
+    kw = dict(n_layers=max(2, int(cfg.n_layers * scale)),
+              d_model=heads * hd, n_heads=heads, n_kv_heads=kv,
+              head_dim=hd,
+              d_ff=max(128, int(cfg.d_ff * scale) // 16 * 16),
+              vocab_size=min(cfg.vocab_size, 32768))
+    if cfg.moe:
+        kw.update(n_experts=min(cfg.n_experts, 8),
+                  moe_d_ff=max(128, int(cfg.moe_ff * scale) // 16 * 16))
+        kw["n_layers"] = max(cfg.moe_every, kw["n_layers"]
+                             // cfg.moe_every * cfg.moe_every)
+    if cfg.attention == "mla":
+        kw.update(q_lora_rank=max(32, int(cfg.q_lora_rank * scale)),
+                  kv_lora_rank=max(32, int(cfg.kv_lora_rank * scale)),
+                  qk_nope_dim=hd // 2, qk_rope_dim=hd // 2,
+                  v_head_dim=hd, head_dim=hd)
+    if cfg.attention == "none":
+        kw.update(d_model=max(128, d // 64 * 64), rwkv_head_dim=64)
+        kw["n_heads"] = kw["d_model"] // 64
+        kw["n_kv_heads"] = kw["n_heads"]
+        kw.pop("head_dim", None)
+    if cfg.attention == "hybrid":
+        kw.update(ssm_state=cfg.ssm_state)
+    if cfg.is_enc_dec:
+        kw["encoder_layers"] = max(2, int(cfg.encoder_layers * scale))
+    return cfg.scaled(**kw)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--scale", type=float, default=0.05)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fresh", action="store_true")
+    ap.add_argument("--mesh", default="elastic",
+                    choices=["elastic", "single", "multi"])
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--data", default="", help="binary shard path")
+    args = ap.parse_args(argv)
+
+    cfg = scaled_config(args.arch, args.scale)
+    n_params = cfg.param_count()
+    print(f"arch={cfg.name} scaled params={n_params/1e6:.1f}M "
+          f"layers={cfg.n_layers} d={cfg.d_model}")
+
+    if args.mesh == "elastic":
+        mesh = mesh_lib.elastic_mesh()
+    else:
+        mesh = mesh_lib.make_production_mesh(multi_pod=args.mesh == "multi")
+    policy = ShardingPolicy(mesh, seq_shard_activations=False)
+
+    key = jax.random.PRNGKey(0)
+    params = model_lib.init_params(cfg, key)
+    pspecs = policy.param_specs(jax.eval_shape(lambda: params))
+    psh = policy.named(pspecs)
+    params = jax.device_put(params, psh)
+
+    opt = adamw.AdamW(lr=args.lr, total_steps=args.steps,
+                      warmup_steps=max(10, args.steps // 20))
+    opt_state = opt.init(params)
+
+    dcfg = DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch, path=args.data or None,
+        num_prefix_embeds=cfg.num_prefix_embeds
+        if cfg.modality == "vision" else 0,
+        d_model=cfg.d_model,
+        enc_frames=max(args.seq // 4, 16) if cfg.is_enc_dec else 0)
+    source = make_source(dcfg)
+
+    train_step = jax.jit(
+        steps_lib.make_train_step(cfg, opt, remat=True),
+        donate_argnums=(0, 1))
+
+    start = 0
+    ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and not args.fresh and ckpt.latest_step() is not None:
+        rep = NamedSharding(mesh, P())
+        opt_sh = adamw.OptState(m=psh, v=psh, count=rep)
+        (params, opt_state), start, extras = ckpt.restore(
+            (params, opt_state), shardings=(psh, opt_sh))
+        print(f"resumed from step {start}")
+
+    bsh = {k: NamedSharding(mesh, s) for k, s in policy.data_spec(
+        source.batch(0)).items()}
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = host_slice(source.batch(step), bsh)
+        params, opt_state, metrics = train_step(
+            params, opt_state, batch, jnp.int32(step))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            gn = float(metrics["grad_norm"])
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {loss:.4f} grad_norm {gn:.3f} "
+                  f"({dt:.1f}s)", flush=True)
+        if ckpt and step > start and step % args.ckpt_every == 0:
+            ckpt.save(step, (params, opt_state),
+                      extras={"data_step": step})
+    if ckpt:
+        ckpt.save(args.steps, (params, opt_state),
+                  extras={"data_step": args.steps}, block=True)
+        ckpt.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

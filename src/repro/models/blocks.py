@@ -1,0 +1,258 @@
+"""Sequence-mixing blocks beyond attention: RWKV6 (Finch) and Mamba-style
+selective SSM (used standalone and inside the Hymba hybrid layer).
+
+Both carry O(1) decode state — these are the architectures that run the
+``long_500k`` shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_dense, dense_init, rms_norm_init, apply_rms_norm
+from .scan_util import xscan
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mixing (data-dependent per-channel decay), chunked-parallel
+# ---------------------------------------------------------------------------
+
+def rwkv_time_init(key, cfg) -> Params:
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    L = cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 10)
+    return {
+        "mu": jax.random.uniform(ks[0], (5, D), jnp.float32),  # r,k,v,w,g lerp
+        "wr": dense_init(ks[1], D, H * hd),
+        "wk": dense_init(ks[2], D, H * hd),
+        "wv": dense_init(ks[3], D, H * hd),
+        "wg": dense_init(ks[4], D, H * hd),
+        "w0": jax.random.normal(ks[5], (H * hd,), jnp.float32) - 6.0,
+        "w1": dense_init(ks[6], D, L),
+        "w2": dense_init(ks[7], L, H * hd, scale=0.01),
+        "u": jax.random.normal(ks[8], (H, hd), jnp.float32) * 0.1,
+        "ln": rms_norm_init(ks[9], H * hd),
+        "wo": dense_init(jax.random.fold_in(key, 99), H * hd, D,
+                         scale=1.0 / np.sqrt(H * hd)),
+    }
+
+
+def _wkv_chunk(r, k, v, w_log, u, state):
+    """One chunk of the WKV6 recurrence, parallel inside the chunk.
+
+    r,k,v: (B,H,C,hd); w_log: (B,H,C,hd) = log decay in (-inf, 0);
+    u: (H,hd) bonus; state: (B,H,hd,hd) mapping k-dim -> v-dim.
+    Returns (out (B,H,C,hd), new_state).
+    """
+    C = r.shape[2]
+    cum = jnp.cumsum(w_log, axis=2)                     # decay from chunk start
+    # inter-chunk: r_i . diag(exp(cum_{i-1})) . state ; cum_{i-1} = cum_i - w_i
+    r_dec = r * jnp.exp(cum - w_log)
+    out = jnp.einsum("bhck,bhkv->bhcv", r_dec, state)
+    # intra-chunk: sum_{j<i} (r_i * exp(cum_{i-1} - cum_j)) . k_j  v_j
+    att = jnp.einsum("bhik,bhjk->bhij", r_dec, k * jnp.exp(-cum))
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    att = jnp.where(mask, att, 0.0)
+    out = out + jnp.einsum("bhij,bhjv->bhiv", att, v)
+    # diagonal bonus term: (r_i * u . k_i) v_i
+    diag = jnp.einsum("bhck,hk,bhck->bhc", r, u, k)
+    out = out + diag[..., None] * v
+    # state update: S' = diag(exp(cum_C)) S + sum_j diag(exp(cum_C - cum_j)) k_j v_j
+    total = cum[:, :, -1:, :]
+    kd = k * jnp.exp(total - cum)
+    new_state = state * jnp.exp(total.squeeze(2))[..., None] + \
+        jnp.einsum("bhck,bhcv->bhkv", kd, v)
+    return out, new_state
+
+
+def apply_rwkv_time(p: Params, x: jnp.ndarray, cfg, *,
+                    state: Optional[Params] = None,
+                    chunk: int = 64) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """RWKV6 time mixing.  ``state`` (decode): {"x": (B,D), "s": (B,H,hd,hd)}."""
+    B, S, D = x.shape
+    hd = cfg.rwkv_head_dim
+    H = D // hd
+    first = (jnp.zeros_like(x[:, :1]) if state is None
+             else state["x"][:, None, :].astype(x.dtype))
+    prev = jnp.concatenate([first, x[:, :-1]], axis=1)
+    mu = p["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + mu[i] * (prev - x) for i in range(5))
+    r = apply_dense(p["wr"], xr).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = apply_dense(p["wk"], xk).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = apply_dense(p["wv"], xv).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(apply_dense(p["wg"], xg))
+    dec = p["w0"].astype(jnp.float32) + \
+        jnp.tanh(apply_dense(p["w1"], xw).astype(jnp.float32)) @ \
+        p["w2"]["w"]
+    w_log = -jnp.exp(dec)                                # log decay < 0
+    w_log = w_log.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    u = p["u"].astype(jnp.float32)
+
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    s0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None
+          else state["s"].astype(jnp.float32))
+    if S == 1:
+        out, s1 = _wkv_chunk(rf, kf, vf, w_log, u, s0)
+    elif S % chunk == 0 and S > chunk:
+        nc = S // chunk
+
+        def step(s, xs):
+            rc, kc, vc, wc = xs
+            o, s = _wkv_chunk(rc, kc, vc, wc, u, s)
+            return s, o
+
+        split = lambda a: a.reshape(B, H, nc, chunk, hd).transpose(2, 0, 1, 3, 4)
+        s1, outs = xscan(step, s0, tuple(map(split, (rf, kf, vf, w_log))))
+        out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+    else:
+        out, s1 = _wkv_chunk(rf, kf, vf, w_log, u, s0)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * hd).astype(x.dtype)
+    out = apply_rms_norm(p["ln"], out, cfg.rms_eps) * g
+    out = apply_dense(p["wo"], out)
+    new_state = None
+    if state is not None:
+        new_state = {"x": x[:, -1].astype(state["x"].dtype),
+                     "s": s1.astype(state["s"].dtype)}
+    return out, new_state
+
+
+def rwkv_channel_init(key, cfg) -> Params:
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "mu": jax.random.uniform(ks[0], (2, D), jnp.float32),
+        "wk": dense_init(ks[1], D, F),
+        "wv": dense_init(ks[2], F, D, scale=1.0 / np.sqrt(F)),
+        "wr": dense_init(ks[3], D, D),
+    }
+
+
+def apply_rwkv_channel(p: Params, x: jnp.ndarray, cfg, *,
+                       state: Optional[Params] = None
+                       ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    B, S, D = x.shape
+    first = (jnp.zeros_like(x[:, :1]) if state is None
+             else state["x"][:, None, :].astype(x.dtype))
+    prev = jnp.concatenate([first, x[:, :-1]], axis=1)
+    mu = p["mu"].astype(x.dtype)
+    xk = x + mu[0] * (prev - x)
+    xr = x + mu[1] * (prev - x)
+    k = jnp.square(jax.nn.relu(apply_dense(p["wk"], xk)))
+    out = jax.nn.sigmoid(apply_dense(p["wr"], xr)) * apply_dense(p["wv"], k)
+    new_state = None
+    if state is not None:
+        new_state = {"x": x[:, -1].astype(state["x"].dtype)}
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (Hymba's parallel head)
+# ---------------------------------------------------------------------------
+
+def ssm_init(key, cfg) -> Params:
+    D, di, ds, dt = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_dt_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di),
+        "conv": jax.random.normal(ks[1], (cfg.conv_kernel, di), jnp.float32)
+        * (1.0 / np.sqrt(cfg.conv_kernel)),
+        "x_proj": dense_init(ks[2], di, dt + 2 * ds),
+        "dt_proj": dense_init(ks[3], dt, di),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, D, scale=1.0 / np.sqrt(di)),
+    }
+
+
+def apply_ssm(p: Params, x: jnp.ndarray, cfg, *,
+              state: Optional[Params] = None,
+              chunk: int = 256) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Selective scan.  ``state`` (decode): {"h": (B,di,ds),
+    "conv": (B,k-1,di)} — O(1) per token.
+
+    For long sequences the scan is *chunked*: the (B,S,d_inner,d_state)
+    discretized operands are materialized one chunk at a time inside a
+    ``lax.scan`` (carry = h), bounding memory at O(chunk * di * ds)
+    instead of O(S * di * ds) — the associative scan runs within chunks.
+    """
+    B, S, D = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    kk = cfg.conv_kernel
+    xz = apply_dense(p["in_proj"], x)
+    xin, z = xz[..., :di], xz[..., di:]
+
+    # depthwise causal conv along S
+    if state is None:
+        pad = jnp.zeros((B, kk - 1, di), xin.dtype)
+        new_conv = None
+    else:
+        pad = state["conv"].astype(xin.dtype)
+        new_conv = jnp.concatenate([pad, xin], axis=1)[:, -(kk - 1):]
+    xc = jnp.concatenate([pad, xin], axis=1)
+    conv_w = p["conv"].astype(xin.dtype)
+    xconv = sum(xc[:, i:i + S] * conv_w[i] for i in range(kk))
+    xconv = jax.nn.silu(xconv)
+
+    proj = apply_dense(p["x_proj"], xconv)
+    dt_r, Bm, Cm = (proj[..., :cfg.ssm_dt_rank],
+                    proj[..., cfg.ssm_dt_rank:cfg.ssm_dt_rank + ds],
+                    proj[..., cfg.ssm_dt_rank + ds:])
+    dt = jax.nn.softplus(apply_dense(p["dt_proj"], dt_r)).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                              # (di, ds)
+    h0 = (jnp.zeros((B, di, ds), jnp.float32) if state is None
+          else state["h"].astype(jnp.float32))
+
+    def assoc(a, b):
+        return (a[0] * b[0], a[1] * b[0] + b[1])
+
+    def scan_block(h_in, dt_c, Bm_c, xconv_c, Cm_c):
+        """(B,C,...) slices -> (h_out, y (B,C,di))."""
+        da = jnp.exp(dt_c[..., None] * A)
+        db = (dt_c[..., None] * Bm_c[:, :, None, :].astype(jnp.float32)
+              * xconv_c[..., None].astype(jnp.float32))
+        da_ = jnp.concatenate([jnp.ones_like(da[:, :1]), da], axis=1)
+        db_ = jnp.concatenate([h_in[:, None], db], axis=1)
+        _, hs = jax.lax.associative_scan(assoc, (da_, db_), axis=1)
+        hs = hs[:, 1:]
+        y = jnp.einsum("bsdn,bsn->bsd", hs, Cm_c.astype(jnp.float32))
+        return hs[:, -1], y
+
+    if S == 1:
+        da = jnp.exp(dt[:, 0][..., None] * A)
+        db = (dt[:, 0][..., None] * Bm[:, 0][:, None, :].astype(jnp.float32)
+              * xconv[:, 0][..., None].astype(jnp.float32))
+        h_last = da * h0 + db
+        y = jnp.einsum("bdn,bn->bd", h_last,
+                       Cm[:, 0].astype(jnp.float32))[:, None]
+    elif S > chunk and S % chunk == 0:
+        nc = S // chunk
+
+        def split(a):
+            return a.reshape(B, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+        def step(h, xs):
+            dt_c, Bm_c, xconv_c, Cm_c = xs
+            h2, y = scan_block(h, dt_c, Bm_c, xconv_c, Cm_c)
+            return h2, y
+
+        h_last, ys = xscan(step, h0,
+                           (split(dt), split(Bm), split(xconv), split(Cm)))
+        y = ys.swapaxes(0, 1).reshape(B, S, di)
+    else:
+        h_last, y = scan_block(h0, dt, Bm, xconv, Cm)
+    y = y.astype(x.dtype) + xconv * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = apply_dense(p["out_proj"], y)
+    new_state = None
+    if state is not None:
+        new_state = {"h": h_last.astype(state["h"].dtype),
+                     "conv": new_conv.astype(state["conv"].dtype)}
+    return out, new_state

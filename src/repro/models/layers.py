@@ -1,0 +1,435 @@
+"""Layer primitives shared by all architectures (functional, no framework).
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every ``init_*``
+has a matching ``apply_*``.  Compute runs in ``cfg.compute_dtype``
+(bf16 by default) with f32 softmax/norm accumulation; parameters stay in
+``cfg.param_dtype``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .scan_util import xscan
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Attention-tensor sharding hook (set by the launcher during tracing):
+# callable(tensor, kind) -> tensor, with kind in {"q", "kv", "out"}.
+# Used to pin head-parallel attention (Megatron-style) so XLA never
+# materializes replicated (H, S, S) score tensors.
+# ---------------------------------------------------------------------------
+import contextlib as _ctxlib
+
+_ATTN_CONSTRAINT = None
+
+
+@_ctxlib.contextmanager
+def attention_constraint(fn):
+    global _ATTN_CONSTRAINT
+    old, _ATTN_CONSTRAINT = _ATTN_CONSTRAINT, fn
+    try:
+        yield
+    finally:
+        _ATTN_CONSTRAINT = old
+
+
+def _constrain(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if _ATTN_CONSTRAINT is None:
+        return x
+    return _ATTN_CONSTRAINT(x, kind)
+
+
+def _norm_init(key, shape):
+    return jnp.ones(shape, jnp.float32)
+
+
+def dense_init(key, in_dim: int, out_dim: int, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return {"w": jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale}
+
+
+def apply_dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["w"].astype(x.dtype)
+
+
+def rms_norm_init(key, dim: int) -> Params:
+    return {"scale": _norm_init(key, (dim,))}
+
+
+def apply_rms_norm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd) or (..., S, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions.ndim + 2:                    # head axis present
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Scaled dot-product attention with optional flash-style chunking
+# ---------------------------------------------------------------------------
+
+def _dot_f32(eq: str, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """einsum with f32 accumulation (``preferred_element_type`` — the
+    MXU-native form).  The CPU *runtime* cannot execute bf16xbf16->f32
+    dots, so plain CPU runs (tests, examples) upcast inputs instead; the
+    dry-run sets REPRO_TPU_FAITHFUL_DOT=1 to keep the TPU-faithful form,
+    which lowers and compiles fine on CPU and keeps the memory analysis
+    honest (bf16, not f32, attention tensors)."""
+    import os as _os
+    if (jax.default_backend() == "cpu"
+            and not _os.environ.get("REPRO_TPU_FAITHFUL_DOT")):
+        return jnp.einsum(eq, a.astype(jnp.float32), b.astype(jnp.float32))
+    return jnp.einsum(eq, a, b, preferred_element_type=jnp.float32)
+
+def sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+         causal: bool, q_offset: jnp.ndarray | int = 0,
+         kv_positions: Optional[jnp.ndarray] = None,
+         window: int = 0, kv_chunk: int = 0) -> jnp.ndarray:
+    """Grouped-query attention core.
+
+    q: (B, S, H, hd); k, v: (B, Skv, K, hd) with H = K * G.
+    ``q_offset``: absolute position of q[0] (decode: current index).
+    ``kv_positions``: absolute positions of cached kv (for ring buffers);
+    defaults to arange(Skv).
+    ``window``: sliding-window size (0 = full).
+    ``kv_chunk``: if > 0, stream over kv chunks with running softmax
+    (flash-attention-style, keeps O(S * chunk) score memory).
+    """
+    B, S, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    qh = q.reshape(B, S, K, G, hd)
+    scale = 1.0 / np.sqrt(hd)
+    q_pos = q_offset + jnp.arange(S)
+
+    def mask_for(kpos):
+        # negative positions mark never-written ring-buffer slots
+        m = jnp.broadcast_to(kpos[None, :] >= 0, (S, kpos.shape[0]))
+        if causal:
+            m &= q_pos[:, None] >= kpos[None, :]
+        if window > 0:
+            m &= kpos[None, :] > q_pos[:, None] - window
+        return m
+
+    kv_pos = (kv_positions if kv_positions is not None
+              else jnp.arange(Skv))
+
+    if kv_chunk and Skv > kv_chunk and Skv % kv_chunk == 0:
+        nchunks = Skv // kv_chunk
+        kc = k.reshape(B, nchunks, kv_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(B, nchunks, kv_chunk, K, hd).transpose(1, 0, 2, 3, 4)
+        pc = kv_pos.reshape(nchunks, kv_chunk)
+
+        def step(carry, xs):
+            m_i, l_i, acc = carry
+            kci, vci, pci = xs
+            s = _dot_f32("bskgh,btkh->bkgst", qh, kci) * scale
+            s = jnp.where(mask_for(pci)[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_i - m_new)
+            l_new = l_i * corr + jnp.sum(p, axis=-1)
+            pv = _dot_f32("bkgst,btkh->bskgh", p.astype(q.dtype), vci)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, K, G, S), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, K, G, S), jnp.float32)
+        acc0 = jnp.zeros((B, S, K, G, hd), jnp.float32)
+        (m_f, l_f, acc), _ = xscan(step, (m0, l0, acc0), (kc, vc, pc))
+        out = acc / jnp.maximum(l_f, 1e-30).transpose(0, 3, 1, 2)[..., None]
+    else:
+        s = _dot_f32("bskgh,btkh->bkgst", qh, k) * scale
+        s = jnp.where(mask_for(kv_pos)[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        out = _dot_f32("bkgst,btkh->bskgh", p.astype(q.dtype), v)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (self or cross), KV cache aware
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, cross: bool = False) -> Params:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], D, H * hd),
+        "wk": dense_init(ks[1], D, K * hd),
+        "wv": dense_init(ks[2], D, K * hd),
+        "wo": dense_init(ks[3], H * hd, D, scale=1.0 / np.sqrt(H * hd)),
+    }
+
+
+def apply_gqa(p: Params, x: jnp.ndarray, cfg, *,
+              positions: jnp.ndarray,
+              cache: Optional[Params] = None,
+              cache_index: Optional[jnp.ndarray] = None,
+              kv_source: Optional[jnp.ndarray] = None,
+              cross: bool = False,
+              causal: bool = True,
+              window: int = 0,
+              kv_chunk: int = 0) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Self-attention or cross-attention (``cross=True``).
+
+    Self + ``cache``: decode mode — x is (B, 1, D), k/v appended at
+    ``cache_index`` (ring-buffer slot when ``window > 0``).
+    Cross + ``cache``: k/v were precomputed at prefill; read-only.
+    Cross without cache: k/v computed from ``kv_source``.
+    """
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = apply_dense(p["wq"], x).reshape(B, S, H, hd)
+    use_rope = not cross
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    q = _constrain(q, "q")
+
+    kv_pos = None
+    if cross and cache is not None:
+        k = cache["k"].transpose(0, 2, 1, 3)   # (B, enc_len, K, hd)
+        v = cache["v"].transpose(0, 2, 1, 3)
+        new_cache = cache
+    else:
+        src = x if not cross else kv_source
+        k = apply_dense(p["wk"], src).reshape(B, -1, K, hd)
+        v = apply_dense(p["wv"], src).reshape(B, -1, K, hd)
+        if use_rope:
+            k = apply_rope(k, positions, cfg.rope_theta)
+        new_cache = None
+        if cache is not None:
+            # decode: write current kv into the cache
+            Smax = cache["k"].shape[2]
+            slot = cache_index % Smax if window > 0 else cache_index
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+                (0, 0, slot, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+                (0, 0, slot, 0))
+            new_cache = {"k": kc, "v": vc}
+            k = kc.transpose(0, 2, 1, 3)
+            v = vc.transpose(0, 2, 1, 3)
+            if window > 0:
+                # ring buffer: slot s holds the latest position == s (mod Smax)
+                slots = jnp.arange(Smax)
+                latest = cache_index  # position just written
+                kv_pos = latest - ((latest - slots) % Smax)
+            else:
+                kv_pos = jnp.arange(Smax)
+
+    q_offset = cache_index if cache_index is not None else positions[0, 0]
+    k = _constrain(k, "kv")
+    v = _constrain(v, "kv")
+    out = sdpa(q, k, v, causal=causal and not cross,
+               q_offset=q_offset, kv_positions=kv_pos,
+               window=window, kv_chunk=kv_chunk)
+    out = _constrain(out, "out")
+    out = apply_dense(p["wo"], out.reshape(B, S, H * hd))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg) -> Params:
+    D, H = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wkv_a": dense_init(ks[0], D, kr + dr),
+        "kv_norm": rms_norm_init(ks[1], kr),
+        "wkv_b": dense_init(ks[2], kr, H * (dn + dv)),
+        "wo": dense_init(ks[3], H * dv, D, scale=1.0 / np.sqrt(H * dv)),
+    }
+    if qr:
+        p["wq_a"] = dense_init(ks[4], D, qr)
+        p["q_norm"] = rms_norm_init(ks[5], qr)
+        p["wq_b"] = dense_init(ks[6], qr, H * (dn + dr))
+    else:
+        p["wq"] = dense_init(ks[7], D, H * (dn + dr))
+    return p
+
+
+def apply_mla(p: Params, x: jnp.ndarray, cfg, *,
+              positions: jnp.ndarray,
+              cache: Optional[Params] = None,
+              cache_index: Optional[jnp.ndarray] = None,
+              kv_chunk: int = 0) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Latent attention; the cache stores only (c_kv, k_rope) — the MLA
+    memory saving — and k/v are re-expanded from the latent on read."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    if cfg.q_lora_rank:
+        cq = apply_rms_norm(p["q_norm"], apply_dense(p["wq_a"], x), cfg.rms_eps)
+        q = apply_dense(p["wq_b"], cq)
+    else:
+        q = apply_dense(p["wq"], x)
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = apply_dense(p["wkv_a"], x)
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = apply_rms_norm(p["kv_norm"], c_kv, cfg.rms_eps)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)  # (B,S,dr) shared
+
+    new_cache = None
+    if cache is not None:
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, cache_index, 0))
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype),
+            (0, cache_index, 0))
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+        c_kv, k_rope = ckv_c, kr_c
+
+    Skv = c_kv.shape[1]
+    kvb = apply_dense(p["wkv_b"], c_kv).reshape(B, Skv, H, dn + dv)
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, Skv, H, dr))],
+        axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q_offset = cache_index if cache_index is not None else positions[0, 0]
+    # v head dim differs from qk head dim; pad v to qk dim for shared sdpa
+    out = sdpa(qf, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv))),
+               causal=True, q_offset=q_offset, kv_chunk=kv_chunk)
+    out = out[..., :dv]
+    out = apply_dense(p["wo"], out.reshape(B, S, H * dv))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(ks[0], d_model, d_ff),
+        "w3": dense_init(ks[1], d_model, d_ff),
+        "w2": dense_init(ks[2], d_ff, d_model, scale=1.0 / np.sqrt(d_ff)),
+    }
+
+
+def apply_mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return apply_dense(
+        p["w2"], jax.nn.silu(apply_dense(p["w1"], x)) * apply_dense(p["w3"], x))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, scatter-based dispatch — no (N,E,C) tensor)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg) -> Params:
+    D, F, E = cfg.d_model, cfg.moe_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    s1, s2 = 1.0 / np.sqrt(D), 1.0 / np.sqrt(F)
+    p = {
+        "router": dense_init(ks[0], D, E),
+        "w1": jax.random.normal(ks[1], (E, D, F), jnp.float32) * s1,
+        "w3": jax.random.normal(ks[2], (E, D, F), jnp.float32) * s1,
+        "w2": jax.random.normal(ks[3], (E, F, D), jnp.float32) * s2,
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], D, F * cfg.n_shared_experts)
+    return p
+
+
+def _moe_route_group(p: Params, xt: jnp.ndarray, cfg
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Route one token group (n, D) through the experts (scatter-based
+    dispatch; n is the per-group token count)."""
+    n, D = xt.shape
+    E, K = cfg.n_experts, cfg.top_k
+    logits = (xt @ p["router"]["w"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                     # (n, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(np.ceil(cfg.capacity_factor * K * n / E))
+    cap = max(1, min(cap, n))
+    if n <= 8 * E:   # decode-sized batches: no capacity drops
+        cap = n
+    # position of each (token, k) inside its expert queue
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)        # (n, K, E)
+    flat = onehot.reshape(n * K, E)
+    pos = jnp.cumsum(flat, axis=0) - 1                      # (n*K, E)
+    pos = jnp.take_along_axis(pos, idx.reshape(n * K, 1),
+                              axis=1).reshape(n, K)
+    keep = pos < cap
+    aux = jnp.mean(probs.mean(0)
+                   * jax.nn.one_hot(idx[:, 0], E).mean(0)) * E * E
+
+    eidx = jnp.where(keep, idx, E)                          # drop -> expert E
+    ppos = jnp.where(keep, pos, 0)
+    xe = jnp.zeros((E + 1, cap, D), xt.dtype)
+    xe = xe.at[eidx.reshape(-1), ppos.reshape(-1)].set(
+        jnp.repeat(xt[:, None], K, 1).reshape(n * K, D), mode="drop")
+    xe = xe[:E]
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w1"].astype(xe.dtype))
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w3"].astype(xe.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * g,
+                    p["w2"].astype(xe.dtype))
+    # gather back
+    yk = ye[jnp.minimum(eidx, E - 1).reshape(-1), ppos.reshape(-1)]
+    yk = yk.reshape(n, K, D) * (gate * keep).astype(xt.dtype)[..., None]
+    return yk.sum(1), aux.astype(jnp.float32)
+
+
+def apply_moe(p: Params, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output, aux_loss).  Token-choice top-k with capacity.
+
+    With ``cfg.route_groups == G > 1`` tokens are routed within G
+    independent groups (vmapped).  Setting G to the DP shard count makes
+    the dispatch scatter *batch-partitioned* under SPMD — routing stays
+    shard-local and no replicated (N, D) gather/scatter is ever
+    materialized (this is how per-device routing works on real systems).
+    """
+    B, S, D = x.shape
+    N = B * S
+    G = max(1, cfg.route_groups)
+    if N % G != 0 or (N // G) < cfg.n_experts:
+        G = 1
+    if G == 1:
+        out, aux = _moe_route_group(p, x.reshape(N, D), cfg)
+    else:
+        xg = x.reshape(G, N // G, D)
+        out, aux = jax.vmap(lambda xt: _moe_route_group(p, xt, cfg))(xg)
+        aux = aux.mean()
+    out = out.reshape(B, S, D)
+    if "shared" in p:
+        out = out + apply_mlp(p["shared"], x)
+    return out, aux

@@ -1,0 +1,434 @@
+"""Model assembly: decoder-only and encoder-decoder transformers covering
+all ten assigned architectures, with scan-over-layers, activation remat,
+KV/state caches and modality-frontend stubs.
+
+Parameter layout: per-layer parameters are stacked on a leading axis and
+the forward pass is a ``lax.scan`` over the stack, keeping HLO size O(1)
+in depth (matters for the 95-layer dry-runs).  When dense and MoE layers
+alternate (``moe_every > 1``) the scan unit is a *group* of ``moe_every``
+layers whose last member is MoE, so the stack stays homogeneous.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks, layers
+from .config import ModelConfig
+from .scan_util import xscan, unroll_scans
+
+Params = Dict[str, Any]
+
+
+def _cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_mix(cfg: ModelConfig, key) -> Params:
+    if cfg.attention == "mla":
+        return {"mla": layers.mla_init(key, cfg)}
+    if cfg.attention == "none":
+        return {"rwkv": blocks.rwkv_time_init(key, cfg)}
+    if cfg.attention == "hybrid":
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        return {"attn": layers.gqa_init(k1, cfg),
+                "ssm": blocks.ssm_init(k2, cfg),
+                "ln_a": layers.rms_norm_init(k3, cfg.d_model),
+                "ln_s": layers.rms_norm_init(k4, cfg.d_model)}
+    return {"attn": layers.gqa_init(key, cfg)}
+
+
+def _init_ffn(cfg: ModelConfig, key, moe_layer: bool) -> Params:
+    if cfg.attention == "none":
+        return {"rwkv_ffn": blocks.rwkv_channel_init(key, cfg)}
+    if moe_layer:
+        return {"moe": layers.moe_init(key, cfg)}
+    return {"mlp": layers.mlp_init(key, cfg.d_model, cfg.d_ff)}
+
+
+def _init_layer(cfg: ModelConfig, key, moe_layer: bool, cross: bool) -> Params:
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln1": layers.rms_norm_init(ks[0], cfg.d_model),
+        "mix": _init_mix(cfg, ks[1]),
+        "ln2": layers.rms_norm_init(ks[2], cfg.d_model),
+        "ffn": _init_ffn(cfg, ks[3], moe_layer),
+    }
+    if cross:
+        p["ln_c"] = layers.rms_norm_init(ks[4], cfg.d_model)
+        p["cross"] = layers.gqa_init(ks[5], cfg, cross=True)
+    return p
+
+
+def _group_layout(cfg: ModelConfig) -> Tuple[int, Tuple[bool, ...]]:
+    if not cfg.moe:
+        return cfg.n_layers, (False,)
+    g = cfg.moe_every
+    assert cfg.n_layers % g == 0, "n_layers must divide by moe_every"
+    return cfg.n_layers // g, tuple([False] * (g - 1) + [True])
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    D, V = cfg.d_model, cfg.vocab_size
+    n_groups, flags = _group_layout(cfg)
+    cross = cfg.is_enc_dec
+
+    def init_group(k):
+        kk = jax.random.split(k, len(flags))
+        return [_init_layer(cfg, kk[i], flags[i], cross)
+                for i in range(len(flags))]
+
+    stacked = jax.vmap(init_group)(jax.random.split(ks[0], n_groups))
+
+    p: Params = {
+        "embed": jax.random.normal(ks[1], (V, D), jnp.float32) * 0.02,
+        "layers": stacked,
+        "final_norm": layers.rms_norm_init(ks[2], D),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(ks[3], D, V, scale=0.02)
+    if cfg.is_enc_dec:
+        p["enc_layers"] = jax.vmap(
+            lambda k: [_init_layer(cfg, k, False, False)])(
+                jax.random.split(ks[4], cfg.encoder_layers))
+        p["enc_norm"] = layers.rms_norm_init(ks[5], D)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Caches (stacked on L to match the scan; regrouped on the fly)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0, dtype=jnp.bfloat16) -> Params:
+    L, D = cfg.n_layers, cfg.d_model
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    c: Params = {}
+    if cfg.attention == "gqa":
+        c["k"] = jnp.zeros((L, batch, K, max_len, hd), dtype)
+        c["v"] = jnp.zeros((L, batch, K, max_len, hd), dtype)
+    elif cfg.attention == "mla":
+        c["ckv"] = jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), dtype)
+        c["krope"] = jnp.zeros((L, batch, max_len, cfg.qk_rope_dim), dtype)
+    elif cfg.attention == "none":
+        H = D // cfg.rwkv_head_dim
+        c["x_tm"] = jnp.zeros((L, batch, D), dtype)
+        c["s"] = jnp.zeros((L, batch, H, cfg.rwkv_head_dim,
+                            cfg.rwkv_head_dim), jnp.float32)
+        c["x_cm"] = jnp.zeros((L, batch, D), dtype)
+    elif cfg.attention == "hybrid":
+        W = min(cfg.sliding_window or max_len, max_len)
+        c["k"] = jnp.zeros((L, batch, K, W, hd), dtype)
+        c["v"] = jnp.zeros((L, batch, K, W, hd), dtype)
+        c["h"] = jnp.zeros((L, batch, cfg.d_inner, cfg.ssm_state),
+                           jnp.float32)
+        c["conv"] = jnp.zeros((L, batch, cfg.conv_kernel - 1, cfg.d_inner),
+                              dtype)
+    if cfg.is_enc_dec:
+        c["xk"] = jnp.zeros((L, batch, K, enc_len, hd), dtype)
+        c["xv"] = jnp.zeros((L, batch, K, enc_len, hd), dtype)
+    return c
+
+
+def _regroup_cache(cfg: ModelConfig, cache):
+    n_groups, flags = _group_layout(cfg)
+    g = len(flags)
+    if g == 1:
+        return jax.tree_util.tree_map(lambda a: a[:, None], cache)
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape(n_groups, g, *a.shape[1:]), cache)
+
+
+def _ungroup_cache(cfg: ModelConfig, cache):
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape(a.shape[0] * a.shape[1], *a.shape[2:]), cache)
+
+
+# ---------------------------------------------------------------------------
+# One decoder layer
+# ---------------------------------------------------------------------------
+
+def _apply_mix(cfg, p, x, *, positions, cache, index, kv_chunk):
+    if cfg.attention == "mla":
+        return layers.apply_mla(p["mla"], x, cfg, positions=positions,
+                                cache=cache, cache_index=index,
+                                kv_chunk=kv_chunk)
+    if cfg.attention == "none":
+        st = None if cache is None else {"x": cache["x_tm"], "s": cache["s"]}
+        out, st2 = blocks.apply_rwkv_time(p["rwkv"], x, cfg, state=st)
+        return out, (None if st2 is None
+                     else {"x_tm": st2["x"], "s": st2["s"]})
+    if cfg.attention == "hybrid":
+        attn_cache = (None if cache is None
+                      else {"k": cache["k"], "v": cache["v"]})
+        a_out, a_new = layers.apply_gqa(
+            p["attn"], x, cfg, positions=positions, cache=attn_cache,
+            cache_index=index, window=cfg.sliding_window, kv_chunk=kv_chunk)
+        st = None if cache is None else {"h": cache["h"],
+                                         "conv": cache["conv"]}
+        s_out, s_new = blocks.apply_ssm(p["ssm"], x, cfg, state=st)
+        out = 0.5 * (layers.apply_rms_norm(p["ln_a"], a_out, cfg.rms_eps)
+                     + layers.apply_rms_norm(p["ln_s"], s_out, cfg.rms_eps))
+        new = None
+        if cache is not None:
+            new = {"k": a_new["k"], "v": a_new["v"],
+                   "h": s_new["h"], "conv": s_new["conv"]}
+        return out, new
+    return layers.apply_gqa(p["attn"], x, cfg, positions=positions,
+                            cache=cache, cache_index=index,
+                            kv_chunk=kv_chunk)
+
+
+def _apply_ffn(cfg, p, x, cache):
+    """Returns (out, channel-mix state or None, aux loss)."""
+    if "rwkv_ffn" in p:
+        st = None if cache is None else {"x": cache["x_cm"]}
+        out, st2 = blocks.apply_rwkv_channel(p["rwkv_ffn"], x, cfg, state=st)
+        return out, (None if st2 is None else st2["x"]), jnp.float32(0.0)
+    if "moe" in p:
+        out, aux = layers.apply_moe(p["moe"], x, cfg)
+        return out, None, aux
+    return layers.apply_mlp(p["mlp"], x), None, jnp.float32(0.0)
+
+
+def _decoder_layer(cfg, p, x, *, positions, cache, index, enc_out, kv_chunk):
+    h = layers.apply_rms_norm(p["ln1"], x, cfg.rms_eps)
+    mix_out, mix_cache = _apply_mix(cfg, p["mix"], h, positions=positions,
+                                    cache=cache, index=index,
+                                    kv_chunk=kv_chunk)
+    x = x + mix_out
+    if "cross" in p:
+        hc = layers.apply_rms_norm(p["ln_c"], x, cfg.rms_eps)
+        cross_cache = None
+        if cache is not None:
+            cross_cache = {"k": cache["xk"], "v": cache["xv"]}
+        c_out, _ = layers.apply_gqa(p["cross"], hc, cfg, positions=positions,
+                                    kv_source=enc_out, cache=cross_cache,
+                                    cross=True, causal=False)
+        x = x + c_out
+    h2 = layers.apply_rms_norm(p["ln2"], x, cfg.rms_eps)
+    ffn_out, x_cm, aux = _apply_ffn(cfg, p["ffn"], h2, cache)
+    x = x + ffn_out
+    new_cache = mix_cache
+    if cache is not None:
+        new_cache = dict(new_cache or {})
+        if x_cm is not None:
+            new_cache["x_cm"] = x_cm
+        if "cross" in p:           # read-only, threaded through unchanged
+            new_cache["xk"] = cache["xk"]
+            new_cache["xv"] = cache["xv"]
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params, tokens, prefix_embeds):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(_cdtype(cfg))
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _logits(cfg: ModelConfig, params, x):
+    xn = layers.apply_rms_norm(params["final_norm"], x, cfg.rms_eps)
+    if cfg.tie_embeddings:
+        return xn @ params["embed"].T.astype(xn.dtype)
+    return layers.apply_dense(params["lm_head"], xn)
+
+
+def encode(cfg: ModelConfig, params, enc_embeds) -> jnp.ndarray:
+    """Encoder stack over stub frontend embeddings (B, F, D)."""
+    x = enc_embeds.astype(_cdtype(cfg))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def step(carry, gparams):
+        xc = carry
+        p = gparams[0]
+        h = layers.apply_rms_norm(p["ln1"], xc, cfg.rms_eps)
+        out, _ = layers.apply_gqa(p["mix"]["attn"], h, cfg,
+                                  positions=positions, causal=False)
+        xc = xc + out
+        h = layers.apply_rms_norm(p["ln2"], xc, cfg.rms_eps)
+        out, _, _ = _apply_ffn(cfg, p["ffn"], h, None)
+        return xc + out, None
+
+    x, _ = xscan(step, x, params["enc_layers"])
+    return layers.apply_rms_norm(params["enc_norm"], x, cfg.rms_eps)
+
+
+def forward(cfg: ModelConfig, params, tokens, *,
+            prefix_embeds=None, enc_embeds=None, remat: bool = False,
+            kv_chunk: int = 0, constraint_fn=None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward (training / scoring). Returns (logits, aux).
+
+    ``constraint_fn(x)``: optional sharding constraint applied to the
+    residual stream at every scan step (sequence parallelism)."""
+    enc_out = encode(cfg, params, enc_embeds) if cfg.is_enc_dec else None
+    x = _embed(cfg, params, tokens, prefix_embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if constraint_fn is not None:
+        x = constraint_fn(x)
+
+    def step(carry, gparams):
+        xc, aux = carry
+        for p in gparams:
+            xc, _, aux_i = _decoder_layer(cfg, p, xc, positions=positions,
+                                          cache=None, index=None,
+                                          enc_out=enc_out, kv_chunk=kv_chunk)
+            aux = aux + aux_i
+        if constraint_fn is not None:
+            xc = constraint_fn(xc)
+        return (xc, aux), None
+
+    if remat:
+        step = jax.checkpoint(step, prevent_cse=False)
+    (x, aux), _ = xscan(step, (x, jnp.float32(0.0)), params["layers"])
+    return _logits(cfg, params, x), aux
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, index, *,
+                kv_chunk: int = 0):
+    """One serving step: tokens (B, 1) at position ``index`` with a
+    populated cache.  Returns (logits (B, 1, V), new_cache)."""
+    x = _embed(cfg, params, tokens, None)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(index, (B, 1)).astype(jnp.int32)
+    gcache = _regroup_cache(cfg, cache)
+
+    def step(carry, xs):
+        xc = carry
+        gparams, gc = xs
+        new_gc = []
+        for i, p in enumerate(gparams):
+            ci = jax.tree_util.tree_map(lambda a: a[i], gc)
+            xc, nc, _ = _decoder_layer(cfg, p, xc, positions=positions,
+                                       cache=ci, index=index, enc_out=None,
+                                       kv_chunk=kv_chunk)
+            new_gc.append(nc)
+        new_gc = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *new_gc)
+        return xc, new_gc
+
+    x, new_cache = xscan(step, x, (params["layers"], gcache))
+    return _logits(cfg, params, x), _ungroup_cache(cfg, new_cache)
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int, *,
+            prefix_embeds=None, enc_embeds=None, kv_chunk: int = 0,
+            cache_dtype=jnp.bfloat16):
+    """Process a prompt and build the decode cache.
+
+    Returns (last-position logits (B, V), cache, next_index).
+    For ring-buffer (sliding-window) attention the cache holds the last W
+    positions; for state models (rwkv/ssm) it holds the final state.
+    """
+    enc_out = encode(cfg, params, enc_embeds) if cfg.is_enc_dec else None
+    x = _embed(cfg, params, tokens, prefix_embeds)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    enc_len = enc_out.shape[1] if enc_out is not None else 0
+    cache = init_cache(cfg, B, max_len, enc_len, cache_dtype)
+    gcache = _regroup_cache(cfg, cache)
+
+    def fill_layer(cfg_p, x_in, ci):
+        """Run one layer over the full prompt and produce its cache slice."""
+        p = cfg_p
+        h = layers.apply_rms_norm(p["ln1"], x_in, cfg.rms_eps)
+        new_ci = dict(ci)
+        if cfg.attention in ("gqa", "hybrid"):
+            ap = p["mix"]["attn"] if cfg.attention == "hybrid" else p["mix"]["attn"]
+            window = cfg.sliding_window if cfg.attention == "hybrid" else 0
+            # full-sequence attention (banded if windowed), then cache tail
+            mix_out, _ = layers.apply_gqa(ap, h, cfg, positions=positions,
+                                          window=window, kv_chunk=kv_chunk)
+            k = layers.apply_dense(ap["wk"], h).reshape(
+                B, S, cfg.n_kv_heads, cfg.head_dim)
+            k = layers.apply_rope(k, positions, cfg.rope_theta)
+            v = layers.apply_dense(ap["wv"], h).reshape(
+                B, S, cfg.n_kv_heads, cfg.head_dim)
+            W = ci["k"].shape[2]
+            if window:
+                # ring buffer: position p -> slot p % W, for the last W
+                tail_pos = jnp.arange(S - W, S) if S >= W else jnp.arange(S)
+                slots = tail_pos % W
+                kk = jnp.zeros_like(ci["k"]).at[:, :, slots].set(
+                    k[:, jnp.maximum(tail_pos, 0)].transpose(0, 2, 1, 3)
+                    .astype(ci["k"].dtype))
+                vv = jnp.zeros_like(ci["v"]).at[:, :, slots].set(
+                    v[:, jnp.maximum(tail_pos, 0)].transpose(0, 2, 1, 3)
+                    .astype(ci["v"].dtype))
+            else:
+                kk = ci["k"].at[:, :, :S].set(
+                    k.transpose(0, 2, 1, 3).astype(ci["k"].dtype))
+                vv = ci["v"].at[:, :, :S].set(
+                    v.transpose(0, 2, 1, 3).astype(ci["v"].dtype))
+            new_ci["k"], new_ci["v"] = kk, vv
+            if cfg.attention == "hybrid":
+                st = {"h": ci["h"], "conv": ci["conv"]}
+                s_out, s_new = blocks.apply_ssm(p["mix"]["ssm"], h, cfg,
+                                                state=st)
+                mix_out = 0.5 * (
+                    layers.apply_rms_norm(p["mix"]["ln_a"], mix_out,
+                                          cfg.rms_eps)
+                    + layers.apply_rms_norm(p["mix"]["ln_s"], s_out,
+                                            cfg.rms_eps))
+                new_ci["h"], new_ci["conv"] = s_new["h"], s_new["conv"]
+        elif cfg.attention == "mla":
+            mix_out, mc = layers.apply_mla(
+                p["mix"]["mla"], h, cfg, positions=positions,
+                cache={"ckv": ci["ckv"], "krope": ci["krope"]},
+                cache_index=jnp.int32(0), kv_chunk=kv_chunk)
+            new_ci.update(mc)
+        else:  # rwkv
+            st = {"x": ci["x_tm"], "s": ci["s"]}
+            mix_out, st2 = blocks.apply_rwkv_time(p["mix"]["rwkv"], h, cfg,
+                                                  state=st)
+            new_ci["x_tm"], new_ci["s"] = st2["x"], st2["s"]
+        x_out = x_in + mix_out
+        if "cross" in p:
+            hc = layers.apply_rms_norm(p["ln_c"], x_out, cfg.rms_eps)
+            ck = layers.apply_dense(p["cross"]["wk"], enc_out).reshape(
+                B, enc_len, cfg.n_kv_heads, cfg.head_dim)
+            cv = layers.apply_dense(p["cross"]["wv"], enc_out).reshape(
+                B, enc_len, cfg.n_kv_heads, cfg.head_dim)
+            new_ci["xk"] = ck.transpose(0, 2, 1, 3).astype(ci["xk"].dtype)
+            new_ci["xv"] = cv.transpose(0, 2, 1, 3).astype(ci["xv"].dtype)
+            c_out, _ = layers.apply_gqa(p["cross"], hc, cfg,
+                                        positions=positions,
+                                        kv_source=enc_out, cross=True,
+                                        causal=False)
+            x_out = x_out + c_out
+        h2 = layers.apply_rms_norm(p["ln2"], x_out, cfg.rms_eps)
+        ffn_out, x_cm, _ = _apply_ffn(cfg, p["ffn"], h2,
+                                      ci if "rwkv_ffn" in p["ffn"] else None)
+        if x_cm is not None:
+            new_ci["x_cm"] = x_cm
+        return x_out + ffn_out, new_ci
+
+    def step(carry, xs):
+        xc = carry
+        gparams, gc = xs
+        new_gc = []
+        for i, p in enumerate(gparams):
+            ci = jax.tree_util.tree_map(lambda a: a[i], gc)
+            xc, nc = fill_layer(p, xc, ci)
+            new_gc.append(nc)
+        new_gc = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *new_gc)
+        return xc, new_gc
+
+    x, new_cache = xscan(step, x, (params["layers"], gcache))
+    logits = _logits(cfg, params, x[:, -1:])
+    # S already includes any prefix embeddings (concatenated in _embed)
+    return logits[:, 0], _ungroup_cache(cfg, new_cache), jnp.int32(S)

@@ -1,0 +1,32 @@
+"""Shared lax.scan wrapper with dry-run unroll control."""
+import jax
+
+
+# ---------------------------------------------------------------------------
+# Scan-unroll control (dry-run probes)
+# ---------------------------------------------------------------------------
+# XLA's HLO cost analysis counts while-loop bodies once, ignoring trip
+# counts, so the dry-run lowers small *unrolled* probe variants to get
+# exact per-layer flop/collective numbers and scales them analytically
+# (see launch/dryrun.py).  ``unroll_scans()`` flips every lax.scan in the
+# model to unroll=True for such probe lowerings.
+import contextlib as _contextlib
+
+_UNROLL = False
+
+
+@_contextlib.contextmanager
+def unroll_scans():
+    global _UNROLL
+    old, _UNROLL = _UNROLL, True
+    try:
+        yield
+    finally:
+        _UNROLL = old
+
+
+def xscan(body, carry, xs, **kw):
+    if _UNROLL:
+        kw = dict(kw)
+        kw["unroll"] = True
+    return jax.lax.scan(body, carry, xs, **kw)

@@ -1,0 +1,153 @@
+"""Train and serve steps for the LM substrate.
+
+``train_step`` is a pure function (params, opt_state, batch) -> (params,
+opt_state, metrics); it composes with pjit via the sharding policy in
+:mod:`repro.launch.sharding`.  ``serve_step`` is one KV-cached decode step;
+``prefill_step`` builds the cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from . import model as model_lib
+from .scan_util import xscan
+from .config import ModelConfig
+
+
+def lm_loss(cfg: ModelConfig, params, batch, *, remat: bool = True,
+            kv_chunk: int = 0, constraint_fn=None):
+    """Next-token cross entropy with optional modality prefixes.
+
+    batch: {"tokens": (B,S) int32, "mask": (B,S) float, optional
+    "prefix_embeds": (B,P,D), "enc_embeds": (B,F,D)}.
+    """
+    tokens = batch["tokens"]
+    logits, aux = model_lib.forward(
+        cfg, params, tokens,
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_embeds=batch.get("enc_embeds"),
+        remat=remat, kv_chunk=kv_chunk, constraint_fn=constraint_fn)
+    P = logits.shape[1] - tokens.shape[1]
+    if P > 0:  # drop prefix positions (vision/audio stubs carry no labels)
+        logits = logits[:, P:]
+    # predict token t+1 from position t
+    logits = logits[:, :-1].astype(jnp.float32)
+    targets = tokens[:, 1:]
+    mask = batch.get("mask")
+    mask = (jnp.ones_like(targets, jnp.float32) if mask is None
+            else mask[:, 1:].astype(jnp.float32))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = nll.sum() / denom
+    # router z-loss style regularizer from MoE aux
+    total = loss + 0.01 * aux
+    metrics = {"loss": loss, "aux": aux,
+               "tokens": mask.sum()}
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt: adamw.AdamW, *,
+                    remat: bool = True, kv_chunk: int = 0,
+                    accum_steps: int = 1, constraint_fn=None,
+                    grad_constraint_fn=None):
+    """Build the jit-able train step.
+
+    ``accum_steps > 1``: gradient accumulation — the global batch is split
+    into microbatches scanned sequentially, bounding activation memory
+    (grads accumulate in f32 at parameter sharding, so no extra comm).
+    ``constraint_fn``: residual-stream sharding constraint (sequence
+    parallelism) threaded into the layer scan.
+    """
+
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def _half(params):
+        # cast matrices to the compute dtype BEFORE the layer scan so FSDP
+        # all-gathers move bf16, not f32 (halves gather traffic + buffers)
+        return jax.tree_util.tree_map(
+            lambda p: p.astype(cdt)
+            if (p.ndim >= 2 and p.dtype == jnp.float32) else p, params)
+
+    def grads_of(params, batch):
+        def loss_fn(ph):
+            return lm_loss(cfg, ph, batch, remat=remat, kv_chunk=kv_chunk,
+                           constraint_fn=constraint_fn)
+
+        (_, metrics), grads_h = jax.value_and_grad(
+            loss_fn, has_aux=True)(_half(params))
+        if grad_constraint_fn is not None:
+            # pin gradients to the parameter sharding BEFORE the f32 cast
+            # and accumulation: turns full-tensor all-reduces into
+            # reduce-scatters (each device receives only its shard)
+            grads_h = grad_constraint_fn(grads_h)
+        grads = jax.tree_util.tree_map(
+            lambda g, p: g.astype(jnp.float32) if p.dtype == jnp.float32
+            else g, grads_h, params)
+        return grads, metrics
+
+    def train_step(params, opt_state, batch, step):
+        if accum_steps == 1:
+            grads, metrics = grads_of(params, batch)
+        else:
+            def split(v):
+                return v.reshape(accum_steps, v.shape[0] // accum_steps,
+                                 *v.shape[1:])
+
+            micro = {k: split(v) for k, v in batch.items()}
+
+            def body(carry, mb):
+                acc, met = carry
+                g, m = grads_of(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                met = jax.tree_util.tree_map(lambda a, b: a + b, met, m)
+                return (acc, met), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            met0 = {"loss": jnp.float32(0), "aux": jnp.float32(0),
+                    "tokens": jnp.float32(0)}
+            (grads, metrics), _ = xscan(body, (zeros, met0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+            metrics = dict(metrics)
+            for k in ("loss", "aux"):
+                metrics[k] = metrics[k] / accum_steps
+
+        updates, new_opt_state = opt.update(grads, opt_state, params, step)
+        new_params = jax.tree_util.tree_map(
+            lambda p, u: (p + u).astype(p.dtype), params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = adamw.global_norm(grads)
+        return new_params, new_opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, *, kv_chunk: int = 0):
+    """One decode step: (params, cache, tokens (B,1), index) ->
+    (next_token (B,1), logits, cache)."""
+
+    def serve_step(params, cache, tokens, index):
+        logits, new_cache = model_lib.decode_step(cfg, params, cache, tokens,
+                                                  index, kv_chunk=kv_chunk)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, *, kv_chunk: int = 0):
+    def prefill_step(params, batch):
+        return model_lib.prefill(
+            cfg, params, batch["tokens"], max_len,
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_embeds=batch.get("enc_embeds"), kv_chunk=kv_chunk)
+
+    return prefill_step

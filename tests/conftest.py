@@ -1,0 +1,52 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import evenodd, su3
+
+
+@pytest.fixture(scope="session")
+def small_lattice():
+    """(U, psi, kappa) on a 4x4x4x8 lattice, complex64."""
+    shape = (4, 4, 4, 8)
+    U = su3.random_gauge(jax.random.PRNGKey(2), shape)
+    k1, k2 = jax.random.PRNGKey(3), jax.random.PRNGKey(4)
+    psi = (jax.random.normal(k1, (*shape, 4, 3))
+           + 1j * jax.random.normal(k2, (*shape, 4, 3))
+           ).astype(jnp.complex64)
+    return U, psi, 0.13
+
+
+@pytest.fixture(scope="session")
+def small_eo(small_lattice):
+    U, psi, kappa = small_lattice
+    e, o = evenodd.pack(psi)
+    Ue, Uo = evenodd.pack_gauge(U)
+    return Ue, Uo, e, o, kappa
+
+
+def build_small(name, **over):
+    """Reduced config of an assigned architecture for smoke tests."""
+    from repro import configs
+
+    cfg = configs.get(name)
+    small = dict(n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+                 d_ff=128, vocab_size=128, head_dim=16)
+    if cfg.n_kv_heads < cfg.n_heads:
+        small["n_kv_heads"] = 2
+    if cfg.attention == "mla":
+        small.update(q_lora_rank=32, kv_lora_rank=24, qk_nope_dim=8,
+                     qk_rope_dim=8, v_head_dim=8, head_dim=16)
+    if cfg.moe:
+        small.update(n_experts=4, moe_d_ff=64, capacity_factor=2.0)
+    if cfg.attention == "none":
+        small.update(rwkv_head_dim=16, rwkv_decay_lora=8)
+    if cfg.attention == "hybrid":
+        small.update(ssm_state=4, sliding_window=64, n_heads=5,
+                     n_kv_heads=5, d_model=80, head_dim=16)
+    if cfg.encoder_layers:
+        small.update(encoder_layers=2)
+    if cfg.num_prefix_embeds:
+        small.update(num_prefix_embeds=6)
+    small.update(over)
+    return cfg.scaled(**small)

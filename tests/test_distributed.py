@@ -1,0 +1,169 @@
+"""Multi-device tests: run in a subprocess with 8 forced host devices so
+the main pytest process keeps a single device (per dry-run instructions,
+the forced device count must never leak into tests)."""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run_py(body: str, n_devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{n_devices} " + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = str(REPO / "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(body)],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_distributed_dhat_all_modes():
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.core import su3, evenodd
+        from repro.kernels import layout, ops, ref
+        from repro.distributed import qcd
+        T,Z,Y,X = 8,8,4,8
+        U = su3.random_gauge(jax.random.PRNGKey(2), (T,Z,Y,X))
+        psi = (jax.random.normal(jax.random.PRNGKey(3), (T,Z,Y,X,4,3))
+               + 1j*jax.random.normal(jax.random.PRNGKey(4),
+                                      (T,Z,Y,X,4,3))).astype(jnp.complex64)
+        e, _ = evenodd.pack(psi)
+        Ue, Uo = evenodd.pack_gauge(U)
+        Uep, Uop = ops.make_planar_fields(Ue, Uo)
+        ep = layout.spinor_to_planar(e)
+        want = ref.apply_dhat_planar_ref(Uep, Uop, ep, 0.13)
+        mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        for backend in ("jnp","pallas"):
+            for overlap in ("fused","split"):
+                part = qcd.QCDPartition.for_mesh(
+                    mesh, backend=backend, overlap=overlap, interpret=True)
+                dhat = jax.jit(qcd.make_dhat_fn(part, 0.13))
+                got = dhat(jax.device_put(Uep, part.gauge_sharding()),
+                           jax.device_put(Uop, part.gauge_sharding()),
+                           jax.device_put(ep, part.spinor_sharding()))
+                err = float(jnp.max(jnp.abs(got - want)))
+                assert err < 1e-5, (backend, overlap, err)
+                print("OK", backend, overlap, err)
+    """)
+    assert out.count("OK") == 4
+
+
+def test_distributed_solver_matches_single():
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.core import su3, evenodd, solver, wilson
+        from repro.kernels import layout, ops
+        from repro.distributed import qcd
+        T,Z,Y,X = 8,4,4,8
+        U = su3.random_gauge(jax.random.PRNGKey(2), (T,Z,Y,X))
+        eta = (jax.random.normal(jax.random.PRNGKey(7), (T,Z,Y,X,4,3))
+               + 1j*jax.random.normal(jax.random.PRNGKey(8),
+                                      (T,Z,Y,X,4,3))).astype(jnp.complex64)
+        Ue, Uo = evenodd.pack_gauge(U)
+        ee, eo = evenodd.pack(eta)
+        kappa = 0.12
+        mesh = jax.make_mesh((4,2), ("data","model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        part = qcd.QCDPartition.for_mesh(mesh, backend="jnp")
+        Uep, Uop = ops.make_planar_fields(Ue, Uo)
+        Uep = jax.device_put(Uep, part.gauge_sharding())
+        Uop = jax.device_put(Uop, part.gauge_sharding())
+        dhat_g = qcd.make_dhat_fn(part, kappa)
+        dhat_dag_g = qcd.make_dhat_dagger_fn(part, kappa)
+        # solve the Schur system distributed, planar layout
+        rhs_c = ee + kappa * evenodd.hop_eo(Ue, Uo, eo)
+        rhs = jax.device_put(layout.spinor_to_planar(rhs_c),
+                             part.spinor_sharding())
+        res = solver.cgnr(lambda v: dhat_g(Uep, Uop, v),
+                          lambda v: dhat_dag_g(Uep, Uop, v),
+                          rhs, tol=1e-6, max_iters=600)
+        xe = layout.spinor_from_planar(res.x)
+        xo = eo + kappa * evenodd.hop_oe(Ue, Uo, xe)
+        xi = evenodd.unpack(xe, xo)
+        r = eta - wilson.apply_wilson(U, xi, kappa)
+        rel = float(jnp.linalg.norm(r)/jnp.linalg.norm(eta))
+        assert rel < 1e-4, rel
+        print("OK dist solve rel", rel)
+    """)
+    assert "OK dist solve" in out
+
+
+def test_compressed_psum_tree():
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed import compress
+        mesh = jax.make_mesh((8,), ("data",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 512, 16)),
+             "b": jax.random.normal(jax.random.PRNGKey(1), (8, 32))}
+        res = {"w": jnp.zeros((512,16)), "b": jnp.zeros((32,))}
+        def f(g, r):
+            m, r2 = compress.compressed_psum_tree(g, "data", r)
+            return m, r2
+        fm = jax.jit(jax.shard_map(f, mesh=mesh,
+                     in_specs=({"w": P("data"), "b": P("data")},
+                               {"w": P(), "b": P()}),
+                     out_specs=(P(), P()), check_vma=False))
+        mean, res2 = fm(g, res)
+        want_w = np.asarray(g["w"]).mean(0)
+        got_w = np.asarray(mean["w"]).reshape(512, 16)
+        # int8 with error feedback: bounded error this step
+        err = np.abs(got_w - want_w).max()
+        bound = np.abs(np.asarray(g["w"])).max() / 254
+        assert err <= bound * 1.05, (err, bound)
+        # small leaf exact (uncompressed)
+        np.testing.assert_allclose(np.asarray(mean["b"]).reshape(-1),
+                                   np.asarray(g["b"]).mean(0), atol=1e-6)
+        print("OK compress")
+    """)
+    assert "OK compress" in out
+
+
+def test_elastic_mesh_shapes():
+    out = run_py("""
+        import jax
+        from repro.launch import mesh as mesh_lib
+        m = mesh_lib.elastic_mesh()
+        assert m.shape["model"] <= 16
+        assert m.devices.size == 8, m.shape
+        m6 = mesh_lib.elastic_mesh(6)
+        assert m6.devices.size == 6
+        print("OK", dict(m.shape), dict(m6.shape))
+    """)
+    assert "OK" in out
+
+
+def test_train_checkpoint_restart_resume():
+    """Kill-and-resume: a restarted run continues from the checkpoint and
+    reaches the same final state as an uninterrupted one (determinism)."""
+    out = run_py("""
+        import subprocess, sys, os, tempfile, json
+        import numpy as np
+        from repro.launch import train
+        import jax, jax.numpy as jnp
+        d = tempfile.mkdtemp()
+        args = ["--arch","minitron-4b","--scale","0.02","--seq","32",
+                "--batch","4","--lr","1e-3","--ckpt-every","5"]
+        # uninterrupted 20 steps
+        train.main(args + ["--steps","20","--ckpt-dir",d+"/a","--fresh"])
+        # interrupted at 10, then resumed to 20
+        train.main(args + ["--steps","10","--ckpt-dir",d+"/b","--fresh"])
+        train.main(args + ["--steps","20","--ckpt-dir",d+"/b"])
+        from repro.checkpoint.ckpt import Checkpointer
+        ca, cb = Checkpointer(d+"/a"), Checkpointer(d+"/b")
+        import glob
+        sa, sb = ca.latest_step(), cb.latest_step()
+        assert sa == sb == 20, (sa, sb)
+        print("OK restart")
+    """, n_devices=1)
+    assert "OK restart" in out

@@ -1,0 +1,52 @@
+"""Gamma-matrix algebra: the mathematical backbone of the Wilson matrix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gamma
+
+
+@pytest.mark.parametrize("mu", range(4))
+def test_hermitian_and_squares_to_one(mu):
+    g = gamma.GAMMA[mu]
+    assert np.allclose(g, g.conj().T)
+    assert np.allclose(g @ g, np.eye(4))
+
+
+def test_anticommutation():
+    for mu in range(4):
+        for nu in range(mu + 1, 4):
+            ac = gamma.GAMMA[mu] @ gamma.GAMMA[nu] \
+                + gamma.GAMMA[nu] @ gamma.GAMMA[mu]
+            assert np.allclose(ac, 0), (mu, nu)
+
+
+def test_gamma5_product():
+    g5 = (gamma.GAMMA[0] @ gamma.GAMMA[1] @ gamma.GAMMA[2]
+          @ gamma.GAMMA[3])
+    assert np.allclose(g5, gamma.GAMMA5)
+    assert np.allclose(np.diag(gamma.GAMMA5), [1, 1, -1, -1])
+
+
+@pytest.mark.parametrize("mu", range(4))
+@pytest.mark.parametrize("s", [+1, -1])
+def test_project_reconstruct_equals_dense(mu, s):
+    key = jax.random.PRNGKey(mu * 2 + (s > 0))
+    psi = (jax.random.normal(key, (3, 5, 4, 3))
+           + 1j * jax.random.normal(jax.random.fold_in(key, 1),
+                                    (3, 5, 4, 3))).astype(jnp.complex64)
+    dense = jnp.einsum("ij,...jc->...ic",
+                       jnp.asarray(gamma.projector(mu, s)), psi)
+    halved = gamma.reconstruct(gamma.project(psi, mu, s), mu, s)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(halved),
+                               atol=2e-6)
+
+
+@pytest.mark.parametrize("mu", range(4))
+def test_projector_property(mu):
+    """(1+g)(1-g) = 0 and (1+g)^2 = 2(1+g): true projectors (x2)."""
+    p_plus = gamma.projector(mu, +1)
+    p_minus = gamma.projector(mu, -1)
+    assert np.allclose(p_plus @ p_minus, 0, atol=1e-6)
+    assert np.allclose(p_plus @ p_plus, 2 * p_plus, atol=1e-6)

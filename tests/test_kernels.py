@@ -1,0 +1,110 @@
+"""Pallas Wilson stencil kernel vs the pure-jnp oracle (interpret mode),
+sweeping lattice shapes, parities, offsets, halo/periodic and the fused
+axpy epilogue."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import evenodd, su3
+from repro.kernels import layout, ops, ref
+from repro.kernels.wilson_stencil import hop_block_planar
+
+
+def make_fields(shape, seed=0):
+    U = su3.random_gauge(jax.random.PRNGKey(seed), shape)
+    k = jax.random.PRNGKey(seed + 1)
+    psi = (jax.random.normal(k, (*shape, 4, 3))
+           + 1j * jax.random.normal(jax.random.fold_in(k, 1),
+                                    (*shape, 4, 3))).astype(jnp.complex64)
+    e, o = evenodd.pack(psi)
+    Ue, Uo = evenodd.pack_gauge(U)
+    return ops.make_planar_fields(Ue, Uo) + (
+        layout.spinor_to_planar(e), layout.spinor_to_planar(o))
+
+
+def test_layout_roundtrip(small_lattice):
+    _, psi, _ = small_lattice
+    e, _ = evenodd.pack(psi)
+    p = layout.spinor_to_planar(e)
+    np.testing.assert_array_equal(
+        np.asarray(layout.spinor_from_planar(p)), np.asarray(e))
+
+
+@pytest.mark.parametrize("shape", [(2, 2, 2, 4), (4, 4, 4, 8),
+                                   (2, 4, 8, 16), (6, 2, 2, 4),
+                                   (3, 5, 4, 8)])
+@pytest.mark.parametrize("parity", [evenodd.EVEN, evenodd.ODD])
+def test_kernel_matches_ref_shapes(shape, parity):
+    Uep, Uop, ep, op_ = make_fields(shape, seed=shape[0] + parity)
+    u_out, u_in = (Uop, Uep) if parity else (Uep, Uop)
+    src = ep if parity else op_
+    got = hop_block_planar(u_out, u_in, src, parity, interpret=True)
+    want = ref.hop_block_planar_ref(u_out, u_in, src, parity)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-5)
+
+
+@pytest.mark.parametrize("t0,z0", [(0, 0), (1, 0), (0, 1), (3, 5)])
+def test_kernel_parity_offsets(t0, z0):
+    Uep, Uop, ep, _ = make_fields((4, 4, 4, 8), seed=9)
+    got = hop_block_planar(Uop, Uep, ep, evenodd.ODD, tz_offset=(t0, z0),
+                           interpret=True)
+    want = ref.hop_block_planar_ref(Uop, Uep, ep, evenodd.ODD,
+                                    tz_offset=(t0, z0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-5)
+
+
+def _extend(a, t, z):
+    a = jnp.concatenate([a.take(jnp.array([-1]), axis=t), a,
+                         a.take(jnp.array([0]), axis=t)], axis=t)
+    return jnp.concatenate([a.take(jnp.array([-1]), axis=z), a,
+                            a.take(jnp.array([0]), axis=z)], axis=z)
+
+
+def test_kernel_halo_mode_equals_periodic():
+    Uep, Uop, ep, _ = make_fields((4, 6, 4, 8), seed=3)
+    got = hop_block_planar(Uop, _extend(Uep, 1, 2), _extend(ep, 0, 1),
+                           evenodd.ODD, halo=True, interpret=True)
+    want = hop_block_planar(Uop, Uep, ep, evenodd.ODD, halo=False,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6)
+
+
+def test_fused_axpy_epilogue():
+    Uep, Uop, ep, _ = make_fields((4, 4, 4, 8), seed=5)
+    kappa = 0.124
+    fused = ops.apply_dhat_planar(Uep, Uop, ep, kappa, fused=True,
+                                  interpret=True)
+    unfused = ops.apply_dhat_planar(Uep, Uop, ep, kappa, fused=False,
+                                    interpret=True)
+    want = ref.apply_dhat_planar_ref(Uep, Uop, ep, kappa)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               atol=5e-5)
+    np.testing.assert_allclose(np.asarray(unfused), np.asarray(want),
+                               atol=5e-5)
+
+
+def test_complex_interface_kernels(small_lattice, small_eo):
+    U, psi, kappa = small_lattice
+    Ue, Uo, e, o, _ = small_eo
+    Uep, Uop = ops.make_planar_fields(Ue, Uo)
+    got = ops.hop_oe_kernel(Uep, Uop, e, interpret=True)
+    want = evenodd.hop_oe(Ue, Uo, e)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=5e-5)
+
+
+def test_kernel_bf16_tolerance():
+    """bf16 planar fields: kernel within bf16 noise of the f32 oracle."""
+    Uep, Uop, ep, _ = make_fields((2, 2, 4, 8), seed=11)
+    got16 = hop_block_planar(Uop.astype(jnp.bfloat16),
+                             Uep.astype(jnp.bfloat16),
+                             ep.astype(jnp.bfloat16), evenodd.ODD,
+                             interpret=True)
+    want = ref.hop_block_planar_ref(Uop, Uep, ep, evenodd.ODD)
+    err = np.max(np.abs(np.asarray(got16, np.float32) - np.asarray(want)))
+    scale = np.max(np.abs(np.asarray(want)))
+    assert err / scale < 0.05

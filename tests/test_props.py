@@ -1,0 +1,122 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import evenodd
+from repro.distributed import compress
+from repro.models import layers
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+dims = st.sampled_from([2, 4, 6, 8])
+
+
+@given(T=dims, Z=dims, Y=dims, Xh=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 2 ** 16))
+def test_pack_unpack_roundtrip(T, Z, Y, Xh, seed):
+    k = jax.random.PRNGKey(seed)
+    full = jax.random.normal(k, (T, Z, Y, 2 * Xh, 4, 3))
+    e, o = evenodd.pack(full)
+    np.testing.assert_array_equal(np.asarray(evenodd.unpack(e, o)),
+                                  np.asarray(full))
+
+
+@given(mu=st.integers(0, 3), seed=st.integers(0, 2 ** 16),
+       out_parity=st.integers(0, 1))
+def test_eo_shift_roundtrip(mu, seed, out_parity):
+    """Shifting +mu as seen from parity p, then -mu as seen from parity
+    1-p, is the identity (the stencil's defining consistency)."""
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (4, 4, 4, 4, 2))
+    fwd = evenodd.eo_shift(x, mu, +1, out_parity)
+    back = evenodd.eo_shift(fwd, mu, -1, 1 - out_parity)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x))
+
+
+@given(seed=st.integers(0, 2 ** 16))
+def test_causality(seed):
+    """Perturbing a future token never changes past logits."""
+    from conftest import build_small
+    from repro.models import model as M
+
+    c = build_small("minitron-4b", n_layers=2)
+    p = M.init_params(c, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (1, 10), 0,
+                              c.vocab_size)
+    l1, _ = M.forward(c, p, toks)
+    toks2 = toks.at[0, 7].set((toks[0, 7] + 1) % c.vocab_size)
+    l2, _ = M.forward(c, p, toks2)
+    np.testing.assert_array_equal(
+        np.asarray(l1[:, :7], np.float32), np.asarray(l2[:, :7],
+                                                      np.float32))
+
+
+@given(seed=st.integers(0, 2 ** 16), pos=st.integers(0, 512))
+def test_rope_preserves_norm(seed, pos):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 1, 2, 32))
+    y = layers.apply_rope(x, jnp.full((1, 1), pos), 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(y)),
+                               np.linalg.norm(np.asarray(x)), rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2 ** 16))
+def test_rope_relative_property(seed):
+    """<rope(q,p), rope(k,p+d)> depends only on the offset d."""
+    k = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k, (1, 1, 1, 16))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (1, 1, 1, 16))
+    def score(p, d):
+        qr = layers.apply_rope(q, jnp.full((1, 1), p), 1e4)
+        kr = layers.apply_rope(kk, jnp.full((1, 1), p + d), 1e4)
+        return float(jnp.sum(qr * kr))
+    assert abs(score(3, 5) - score(40, 5)) < 1e-3
+
+
+@given(seed=st.integers(0, 2 ** 16),
+       scale=st.floats(1e-3, 1e3))
+def test_quantize_roundtrip_error_bound(seed, scale):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * scale
+    q, s = compress.quantize(g)
+    back = compress.dequantize(q, s)
+    # max error <= scale/2 = max|g|/254
+    bound = float(jnp.max(jnp.abs(g))) / 254.0 + 1e-9
+    assert float(jnp.max(jnp.abs(back - g))) <= bound * 1.01
+
+
+@given(seed=st.integers(0, 2 ** 16))
+def test_rms_norm_scale_invariance(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, 8)) + 0.1
+    p = {"scale": jnp.ones((8,))}
+    y1 = layers.apply_rms_norm(p, x)
+    y2 = layers.apply_rms_norm(p, x * 7.3)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+@given(b=st.sampled_from([1, 2]), s=st.sampled_from([4, 8]),
+       h=st.sampled_from([2, 4]), seed=st.integers(0, 1000))
+def test_sdpa_softmax_rowsum(b, s, h, seed):
+    """Attention output is a convex combination of values: componentwise
+    within [min(v), max(v)]."""
+    k = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k, (b, s, h, 8))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (b, s, h, 8))
+    v = jax.random.normal(jax.random.fold_in(k, 2), (b, s, h, 8))
+    out = layers.sdpa(q, kk, v, causal=True)
+    assert float(jnp.max(out)) <= float(jnp.max(v)) + 1e-4
+    assert float(jnp.min(out)) >= float(jnp.min(v)) - 1e-4
+
+
+@given(seed=st.integers(0, 2 ** 16))
+def test_flash_chunking_invariance(seed):
+    """kv-chunked attention == unchunked attention."""
+    k = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k, (2, 16, 4, 8))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (2, 16, 2, 8))
+    v = jax.random.normal(jax.random.fold_in(k, 2), (2, 16, 2, 8))
+    full = layers.sdpa(q, kk, v, causal=True)
+    chunked = layers.sdpa(q, kk, v, causal=True, kv_chunk=4)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               atol=2e-5, rtol=1e-4)

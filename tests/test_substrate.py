@@ -1,0 +1,128 @@
+"""Substrate tests: checkpointing (atomic/last-k/reshard), data pipeline
+determinism, optimizer behavior, gradient accumulation equivalence."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.data.pipeline import BinaryShards, DataConfig, SyntheticLM
+from repro.optim import adamw
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": [jnp.ones((2,)), jnp.zeros((5,), jnp.int32)]}
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    ck.save(7, tree, extras={"cursor": 7})
+    out, step, extras = ck.restore(tree)
+    assert step == 7 and extras["cursor"] == 7
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_keep_k_and_latest(tmp_path):
+    tree = {"x": jnp.zeros((4,))}
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"x": jnp.full((4,), float(s))})
+    assert ck.latest_step() == 4
+    assert sorted(ck.all_steps()) == [3, 4]
+    out, step, _ = ck.restore(tree)
+    assert float(out["x"][0]) == 4.0
+
+
+def test_checkpoint_async_and_crash_safety(tmp_path):
+    tree = {"x": jnp.ones((8, 8))}
+    ck = Checkpointer(str(tmp_path), keep=3, async_save=True)
+    ck.save(1, tree)
+    ck.wait()
+    # simulate a crashed save: stale staging dir must not break restore
+    (tmp_path / ".tmp_step_000000099").mkdir()
+    out, step, _ = ck.restore(tree)
+    assert step == 1
+
+
+def test_checkpoint_restore_resharded(tmp_path):
+    """Restore places leaves with the given shardings (elastic restart)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(3, tree)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    out, _, _ = ck.restore(tree, shardings=sh)
+    assert out["w"].sharding.is_equivalent_to(sh["w"], 2)
+
+
+def test_synthetic_determinism():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=3)
+    src = SyntheticLM(cfg)
+    b1, b2 = src.batch(5), src.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = src.batch(6)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_binary_shards_roundtrip(tmp_path):
+    toks = np.random.default_rng(0).integers(0, 1000, size=10000)
+    path = tmp_path / "shard.bin"
+    BinaryShards.write(str(path), toks)
+    cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=4,
+                     path=str(path))
+    src = BinaryShards(cfg)
+    b = src.batch(0)
+    assert b["tokens"].shape == (4, 32)
+    assert b["tokens"].max() < 1000
+    np.testing.assert_array_equal(src.batch(3)["tokens"],
+                                  src.batch(3)["tokens"])
+
+
+def test_adamw_reduces_quadratic():
+    opt = adamw.AdamW(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                      total_steps=200, clip_norm=10.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    st = opt.init(params)
+    for i in range(150):
+        grads = {"w": 2 * params["w"]}
+        up, st = opt.update(grads, st, params, jnp.int32(i))
+        params = jax.tree_util.tree_map(lambda p, u: p + u, params, up)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_grad_clip():
+    opt = adamw.AdamW(clip_norm=1.0, weight_decay=0.0)
+    g = {"w": jnp.full((4,), 100.0)}
+    st = opt.init(g)
+    up, _ = opt.update(g, st, {"w": jnp.zeros((4,))}, jnp.int32(0))
+    assert np.isfinite(np.asarray(up["w"])).all()
+
+
+def test_grad_accum_equivalence():
+    """accum=2 over a batch == accum=1 on the same batch (same grads up
+    to f32 noise -> same loss metric and very close params)."""
+    from conftest import build_small
+    from repro.models import model as M, steps as steps_lib
+
+    c = build_small("minitron-4b", n_layers=2)
+    p = M.init_params(c, jax.random.PRNGKey(0))
+    opt = adamw.AdamW(lr=1e-3, warmup_steps=1, total_steps=10)
+    st = opt.init(p)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (4, 16),
+                                          0, c.vocab_size),
+             "mask": jnp.ones((4, 16), jnp.float32)}
+    s1 = steps_lib.make_train_step(c, opt, remat=False, accum_steps=1)
+    s2 = steps_lib.make_train_step(c, opt, remat=False, accum_steps=2)
+    p1, _, m1 = s1(p, st, batch, jnp.int32(0))
+    p2, _, m2 = s2(p, st, batch, jnp.int32(0))
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=2e-3)

@@ -1,0 +1,117 @@
+"""Full-lattice Wilson operator and the even-odd decomposition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import evenodd, su3, wilson
+
+
+def test_su3_unitarity_and_det(small_lattice):
+    U, _, _ = small_lattice
+    assert float(su3.unitarity_defect(U)) < 5e-6
+    det = jnp.linalg.det(U)
+    np.testing.assert_allclose(np.asarray(jnp.abs(det)), 1.0, atol=1e-5)
+
+
+def test_plaquette_unit_gauge():
+    P = su3.plaquette(su3.unit_gauge((4, 4, 4, 4)))
+    assert abs(float(P) - 1.0) < 1e-6
+
+
+def test_plaquette_gauge_invariance(small_lattice):
+    """Plaquette is invariant under a random gauge transformation."""
+    U, _, _ = small_lattice
+    shape = U.shape[1:5]
+    g = su3.random_su3(jax.random.PRNGKey(7), shape)
+    from repro.core.lattice import shift
+    Ut = jnp.stack([
+        jnp.einsum("...ab,...bc,...dc->...ad", g, U[mu],
+                   shift(g, mu, +1).conj())
+        for mu in range(4)])
+    p0, p1 = su3.plaquette(U), su3.plaquette(Ut)
+    assert abs(float(p0) - float(p1)) < 1e-5
+
+
+def test_gamma5_hermiticity(small_lattice):
+    U, psi, kappa = small_lattice
+    chi = jnp.roll(psi, 3, axis=1) * (0.7 + 0.2j)
+    lhs = jnp.vdot(chi, wilson.apply_wilson(U, psi, kappa))
+    rhs = jnp.vdot(wilson.apply_wilson_dagger(U, chi, kappa), psi)
+    assert abs(complex(lhs - rhs)) / abs(complex(lhs)) < 1e-4
+
+
+def test_free_field_dispersion():
+    """With unit gauge and kappa = 1/8, D_W annihilates the constant mode
+    (massless free fermion)."""
+    shape = (4, 4, 4, 4)
+    U = su3.unit_gauge(shape)
+    psi = jnp.ones((*shape, 4, 3), jnp.complex64)
+    out = wilson.apply_wilson(U, psi, 1.0 / 8.0)
+    assert float(jnp.max(jnp.abs(out))) < 1e-5
+
+
+def test_pack_unpack_roundtrip(small_lattice):
+    _, psi, _ = small_lattice
+    e, o = evenodd.pack(psi)
+    assert e.shape[3] == psi.shape[3] // 2
+    np.testing.assert_array_equal(np.asarray(evenodd.unpack(e, o)),
+                                  np.asarray(psi))
+
+
+def test_pack_parity_correct(small_lattice):
+    """Every element of the even array has even site parity."""
+    _, psi, _ = small_lattice
+    from repro.core.lattice import site_parity
+    par = np.asarray(site_parity(psi.shape[:4]))
+    e, o = evenodd.pack(psi)
+    pe, po = evenodd.pack(jnp.asarray(
+        par[..., None, None] * jnp.ones_like(psi.real)))
+    assert np.all(np.asarray(pe) == 0)
+    assert np.all(np.asarray(po) == 1)
+
+
+@pytest.mark.parametrize("parity", [evenodd.EVEN, evenodd.ODD])
+def test_hop_block_vs_oracle(small_eo, small_lattice, parity):
+    U, _, _ = small_lattice
+    Ue, Uo, e, o, _ = small_eo
+    src = e if parity == evenodd.ODD else o
+    native = evenodd.hop_block(Ue, Uo, src, parity)
+    oracle = evenodd.hop_block_oracle(U, src, parity)
+    np.testing.assert_allclose(np.asarray(native), np.asarray(oracle),
+                               atol=1e-5)
+
+
+def test_eo_reproduces_full_wilson(small_lattice, small_eo):
+    U, psi, kappa = small_lattice
+    Ue, Uo, e, o, _ = small_eo
+    de, do = evenodd.apply_wilson_eo(Ue, Uo, e, o, kappa)
+    fe, fo = evenodd.pack(wilson.apply_wilson(U, psi, kappa))
+    np.testing.assert_allclose(np.asarray(de), np.asarray(fe), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(do), np.asarray(fo), atol=1e-5)
+
+
+def test_hop_block_ext_periodic_halo(small_eo):
+    """hop_block_ext with manually built periodic halos == hop_block."""
+    Ue, Uo, e, o, _ = small_eo
+
+    def ext(a, t, z):
+        a = jnp.concatenate([a.take(jnp.array([-1]), axis=t), a,
+                             a.take(jnp.array([0]), axis=t)], axis=t)
+        return jnp.concatenate([a.take(jnp.array([-1]), axis=z), a,
+                                a.take(jnp.array([0]), axis=z)], axis=z)
+
+    want = evenodd.hop_block(Ue, Uo, e, evenodd.ODD)
+    got = evenodd.hop_block_ext(Uo, ext(Ue, 1, 2), ext(e, 0, 1),
+                                evenodd.ODD)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5)
+
+
+def test_dhat_definition(small_eo):
+    Ue, Uo, e, _, kappa = small_eo
+    got = evenodd.apply_dhat(Ue, Uo, e, kappa)
+    want = e - kappa ** 2 * evenodd.hop_eo(
+        Ue, Uo, evenodd.hop_oe(Ue, Uo, e))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-6)
