@@ -6,6 +6,10 @@ bulk stencil; replacing them with register shuffles fixed a ~10x
 slowdown.  We reproduce both versions and report (a) wall time, (b) the
 HLO op-category census (gather ops vs shuffle/select ops), confirming the
 shuffle version contains no gathers.
+
+Also times the fused single-kernel ``Dhat`` (odd intermediate resident in
+VMEM scratch) against the unfused two-``pallas_call`` path that
+round-trips the intermediate through HBM.
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import evenodd, su3
+from repro.kernels import layout, ops
 from .common import Row, time_fn
 from .naive_gather import hop_block_gather
 
@@ -68,4 +73,48 @@ def run() -> list:
                  f"gather_ops={cs['gather']};select_ops={cs['select']}"))
     rows.append(("breakdown_gather_hlo_gathers", 0.0,
                  f"gather_ops={cg['gather']};select_ops={cg['select']}"))
+    rows.extend(_dhat_fusion_rows())
+    return rows
+
+
+def _dhat_fusion_rows() -> list:
+    """Fused single-kernel Dhat vs the two-kernel HBM round-trip path.
+
+    Off-TPU both run the Pallas interpreter, so absolute numbers are not
+    hardware-meaningful there — the row notes which mode produced them.
+    The eliminated traffic (one spinor write + its 5-plane pipelined
+    re-read) is reported alongside.
+    """
+    rows: list[Row] = []
+    T, Z, Y, X = 8, 8, 8, 8
+    kappa = 0.13
+    U = su3.random_gauge(jax.random.PRNGKey(3), (T, Z, Y, X))
+    psi = (jax.random.normal(jax.random.PRNGKey(4), (T, Z, Y, X, 4, 3))
+           + 1j * jax.random.normal(jax.random.PRNGKey(5),
+                                    (T, Z, Y, X, 4, 3))
+           ).astype(jnp.complex64)
+    Ue, Uo = evenodd.pack_gauge(U)
+    e, _ = evenodd.pack(psi)
+    Uep, Uop = ops.make_planar_fields(Ue, Uo)
+    ep = layout.spinor_to_planar(e)
+
+    unfused_fn = jax.jit(lambda a, b, c: ops.apply_dhat_planar(
+        a, b, c, kappa))
+    fused_fn = jax.jit(lambda a, b, c: ops.apply_dhat_planar_fused(
+        a, b, c, kappa))
+
+    d = float(jnp.max(jnp.abs(fused_fn(Uep, Uop, ep)
+                              - unfused_fn(Uep, Uop, ep))))
+    assert d < 1e-5, f"fused Dhat diverges from unfused: {d}"
+
+    mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
+    us_u = time_fn(unfused_fn, Uep, Uop, ep)
+    us_f = time_fn(fused_fn, Uep, Uop, ep)
+    tmp_bytes = 4 * 24 * T * Z * Y * (X // 2)
+    saved = tmp_bytes * 6  # 1 HBM write + 5 neighbor-plane re-reads
+    rows.append(("breakdown_dhat_unfused", us_u,
+                 f"mode={mode};tmp_hbm_bytes={tmp_bytes}"))
+    rows.append(("breakdown_dhat_fused", us_f,
+                 f"mode={mode};speedup_vs_unfused={us_u / us_f:.2f}x;"
+                 f"hbm_bytes_eliminated={saved}"))
     return rows

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import su3, evenodd
 from repro.kernels import layout, ops
 from repro.distributed import halo
@@ -26,16 +27,15 @@ def run() -> list:
 
     n = jax.device_count()
     mesh_shape = (n, 1) if n > 1 else (1, 1)
-    mesh = jax.make_mesh(mesh_shape, ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh(mesh_shape, ("data", "model"))
 
     def ext_fn(x):
         return halo.extend_tz(x, ("data",), ("model",), 0, 1)
 
-    sharded = jax.shard_map(ext_fn, mesh=mesh,
-                            in_specs=P("data", "model"),
-                            out_specs=P("data", "model"),
-                            check_vma=False)
+    sharded = compat.shard_map(ext_fn, mesh=mesh,
+                               in_specs=P("data", "model"),
+                               out_specs=P("data", "model"),
+                               check_vma=False)
     fn = jax.jit(sharded)
     us_halo = time_fn(fn, spin)
 

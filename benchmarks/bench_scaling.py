@@ -20,6 +20,7 @@ from .common import Row
 _CHILD = """
 import time
 import jax, jax.numpy as jnp
+from repro import compat
 from repro.core import su3, evenodd
 from repro.kernels import layout, ops
 from repro.distributed import qcd
@@ -35,8 +36,7 @@ Ue, Uo = evenodd.pack_gauge(U)
 e, _ = evenodd.pack(psi)
 Uep, Uop = ops.make_planar_fields(Ue, Uo)
 ep = layout.spinor_to_planar(e)
-mesh = jax.make_mesh((n, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = compat.make_mesh((n, 1), ("data", "model"))
 part = qcd.QCDPartition.for_mesh(mesh, backend="jnp", overlap="fused")
 dhat = jax.jit(qcd.make_dhat_fn(part, 0.13))
 args = (jax.device_put(Uep, part.gauge_sharding()),

@@ -1,6 +1,8 @@
 """Solver benchmark: iterations + sustained throughput of the even-odd
 Schur solve (the paper's workload unit) on reduced paper volumes,
-CGNR vs BiCGStab."""
+CGNR vs BiCGStab, with the operator routed through the backend registry
+(off-TPU the kernel backends run the Pallas interpreter, so only the
+``jnp`` entry is timed there)."""
 from __future__ import annotations
 
 import time
@@ -8,6 +10,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import backends
 from repro.core import evenodd, solver, su3, wilson
 from .common import Row
 
@@ -15,6 +18,9 @@ from .common import Row
 def run() -> list:
     rows: list[Row] = []
     kappa = 0.13
+    on_tpu = jax.default_backend() == "tpu"
+    backends_to_time = (("jnp", "pallas", "pallas_fused") if on_tpu
+                        else ("jnp",))
     for label, shape in (("8x8x8x8", (8, 8, 8, 8)),
                          ("8x8x8x16", (8, 8, 8, 16))):
         U = su3.random_gauge(jax.random.PRNGKey(0), shape)
@@ -27,16 +33,20 @@ def run() -> list:
         vol = 1
         for d in shape:
             vol *= d
-        for method in ("cgnr", "bicgstab"):
-            t0 = time.perf_counter()
-            xe, xo, res = solver.solve_wilson_eo(
-                Ue, Uo, ee, eo, kappa, method=method, tol=1e-6)
-            jax.block_until_ready(xe)
-            dt = time.perf_counter() - t0
-            iters = int(res.iterations)
-            ndhat = 2 * iters if method == "cgnr" else 2 * iters
-            flops = 1368.0 * vol * ndhat
-            rows.append((f"solver_{method}_{label}", dt * 1e6,
-                         f"iters={iters};rel={float(res.residual):.2e};"
-                         f"gflops={flops / dt / 1e9:.2f}"))
+        for backend in backends_to_time:
+            bops = backends.make_wilson_ops(backend, Ue, Uo)
+            for method in ("cgnr", "bicgstab"):
+                t0 = time.perf_counter()
+                xe, xo, res = solver.solve_wilson_eo(
+                    Ue, Uo, ee, eo, kappa, method=method, tol=1e-6,
+                    backend=bops)
+                jax.block_until_ready(xe)
+                dt = time.perf_counter() - t0
+                iters = int(res.iterations)
+                ndhat = 2 * iters
+                flops = 1368.0 * vol * ndhat
+                rows.append(
+                    (f"solver_{backend}_{method}_{label}", dt * 1e6,
+                     f"iters={iters};rel={float(res.residual):.2e};"
+                     f"gflops={flops / dt / 1e9:.2f}"))
     return rows

@@ -1,5 +1,6 @@
 """End-to-end driver example: batch of Wilson solves with checkpointing
-and a simulated failure + restart.
+and a simulated failure + restart, plus an operator-backend sweep —
+backend choice is just a registry string (see repro.backends).
 
   PYTHONPATH=src python examples/solve_wilson.py
 """
@@ -16,6 +17,9 @@ def main():
         print("\n=== restart: resume the same workload (idempotent) ===")
         solve.main(["--lattice", "wilson-16x16x16x16", "--tol", "1e-5",
                     "--n-solves", "1", "--ckpt-dir", d])
+    print("\n=== same solve through the fused-kernel backend ===")
+    solve.main(["--lattice", "wilson-8x8x8x8", "--tol", "1e-5",
+                "--n-solves", "1", "--backend", "pallas_fused"])
 
 
 if __name__ == "__main__":

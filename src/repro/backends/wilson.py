@@ -1,0 +1,144 @@
+"""Built-in Wilson operator backends: jnp / pallas / pallas_fused /
+distributed, all bound through :func:`repro.backends.register_backend`.
+
+Factories take the complex even/odd gauge halves ``(4, T, Z, Y, Xh, 3, 3)``
+and do their layout conversion / sharding once; the returned
+:class:`~repro.backends.WilsonOps` then works purely on complex even/odd
+spinors, so a solver written against one backend runs on any of them.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.core import evenodd, gamma
+from repro.kernels import layout, ops
+
+from . import WilsonOps, register_backend
+
+
+def _dagger_via_gamma5(apply_dhat):
+    """``Dhat^dag = g5 Dhat g5`` on the complex spinor interface."""
+    g5 = jnp.asarray(gamma.GAMMA5)
+
+    def fn(psi_e, kappa):
+        gp = jnp.einsum("ij,...jc->...ic", g5, psi_e)
+        return jnp.einsum("ij,...jc->...ic", g5, apply_dhat(gp, kappa))
+
+    return fn
+
+
+def make_jnp_backend(U_e, U_o, **_unused) -> WilsonOps:
+    """Pure-XLA reference path (complex arithmetic end to end)."""
+    def apply_dhat(psi_e, kappa):
+        return evenodd.apply_dhat(U_e, U_o, psi_e, kappa)
+
+    return WilsonOps(
+        backend="jnp",
+        hop_oe=lambda psi_e: evenodd.hop_oe(U_e, U_o, psi_e),
+        hop_eo=lambda psi_o: evenodd.hop_eo(U_e, U_o, psi_o),
+        apply_dhat=apply_dhat,
+        apply_dhat_dagger=_dagger_via_gamma5(apply_dhat))
+
+
+def _make_pallas(U_e, U_o, *, fused: Optional[bool],
+                 interpret: Optional[bool] = None,
+                 name: str) -> WilsonOps:
+    u_e_p, u_o_p = ops.make_planar_fields(U_e, U_o)
+
+    def apply_dhat(psi_e, kappa):
+        return ops.apply_dhat_kernel(u_e_p, u_o_p, psi_e, kappa,
+                                     fused=fused, interpret=interpret)
+
+    return WilsonOps(
+        backend=name,
+        hop_oe=lambda psi_e: ops.hop_oe_kernel(u_e_p, u_o_p, psi_e,
+                                               interpret=interpret),
+        hop_eo=lambda psi_o: ops.hop_eo_kernel(u_e_p, u_o_p, psi_o,
+                                               interpret=interpret),
+        apply_dhat=apply_dhat,
+        apply_dhat_dagger=_dagger_via_gamma5(apply_dhat))
+
+
+def make_pallas_backend(U_e, U_o, *, interpret=None, **_unused) -> WilsonOps:
+    """Planar Pallas stencil, one ``pallas_call`` per hopping block."""
+    return _make_pallas(U_e, U_o, fused=False, interpret=interpret,
+                        name="pallas")
+
+
+def make_pallas_fused_backend(U_e, U_o, *, interpret=None,
+                              **_unused) -> WilsonOps:
+    """Dhat as a single fused kernel; intermediate never touches HBM.
+
+    Falls back to the two-kernel path automatically when the lattice's
+    VMEM-resident intermediate exceeds the scratch budget
+    (``fused=None`` auto-select in :func:`repro.kernels.ops.apply_dhat_kernel`).
+    """
+    return _make_pallas(U_e, U_o, fused=None, interpret=interpret,
+                        name="pallas_fused")
+
+
+def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
+                             local_backend: str = "jnp",
+                             overlap: str = "fused",
+                             interpret: Optional[bool] = None,
+                             **_unused) -> WilsonOps:
+    """shard_map'd operator over a device mesh.
+
+    Accepts an explicit :class:`repro.distributed.qcd.QCDPartition` (or a
+    mesh to derive one from); defaults to all local devices on a
+    ``(data, model)`` mesh.  The gauge field is planarized and placed with
+    the partition's sharding once, here; spinors are converted and placed
+    per call (convenience path — performance-critical callers should use
+    :mod:`repro.distributed.qcd` directly on planar sharded arrays).
+    """
+    from repro.distributed import qcd  # local import: shard_map machinery
+
+    if partition is None:
+        if mesh is None:
+            mesh = compat.make_mesh((jax.device_count(), 1),
+                                    ("data", "model"))
+        partition = qcd.QCDPartition.for_mesh(
+            mesh, backend=local_backend, overlap=overlap,
+            interpret=interpret)
+
+    u_e_p, u_o_p = ops.make_planar_fields(U_e, U_o)
+    u_e_p = jax.device_put(u_e_p, partition.gauge_sharding())
+    u_o_p = jax.device_put(u_o_p, partition.gauge_sharding())
+    sp_shard = partition.spinor_sharding()
+
+    hop_fns = {p: jax.jit(qcd.make_hop_fn(partition, p))
+               for p in (evenodd.EVEN, evenodd.ODD)}
+    dhat_cache = {}
+
+    def _hop(out_parity, u_out_first):
+        def fn(psi):
+            p = jax.device_put(layout.spinor_to_planar(psi), sp_shard)
+            out = hop_fns[out_parity](*u_out_first, p)
+            return layout.spinor_from_planar(out, dtype=psi.dtype)
+        return fn
+
+    def apply_dhat(psi_e, kappa):
+        k = float(kappa)
+        if k not in dhat_cache:
+            dhat_cache[k] = jax.jit(qcd.make_dhat_fn(partition, k))
+        p = jax.device_put(layout.spinor_to_planar(psi_e), sp_shard)
+        out = dhat_cache[k](u_e_p, u_o_p, p)
+        return layout.spinor_from_planar(out, dtype=psi_e.dtype)
+
+    return WilsonOps(
+        backend="distributed",
+        # H_oe reads even-parity gauge links as u_in, writes odd sites.
+        hop_oe=_hop(evenodd.ODD, (u_o_p, u_e_p)),
+        hop_eo=_hop(evenodd.EVEN, (u_e_p, u_o_p)),
+        apply_dhat=apply_dhat,
+        apply_dhat_dagger=_dagger_via_gamma5(apply_dhat))
+
+
+register_backend("jnp", make_jnp_backend)
+register_backend("pallas", make_pallas_backend)
+register_backend("pallas_fused", make_pallas_fused_backend)
+register_backend("distributed", make_distributed_backend)

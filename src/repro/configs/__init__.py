@@ -86,6 +86,8 @@ class LatticeConfig:
 
 
 QCD_CONFIGS = {
+    # CI/demo size: small enough for interpret-mode kernel backends
+    "wilson-8x8x8x8": LatticeConfig("wilson-8x8x8x8", (8, 8, 8, 8)),
     # paper Table 1 local volumes (single A64FX node = 4 ranks [1,1,2,2])
     "wilson-16x16x16x16": LatticeConfig("wilson-16x16x16x16",
                                         (16, 16, 16, 16)),

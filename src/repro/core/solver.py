@@ -9,7 +9,7 @@ alternative the paper's solver stack (QWS) uses in practice.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -130,14 +130,36 @@ def bicgstab(op: Callable, b, x0=None, *, tol: float = 1e-6,
 def solve_wilson_eo(U_e, U_o, eta_e, eta_o, kappa, *, method: str = "cgnr",
                     tol: float = 1e-6, max_iters: int = 2000,
                     apply_dhat_fn=None, apply_dhat_dag_fn=None,
-                    hop_oe_fn=None, hop_eo_fn=None):
+                    hop_oe_fn=None, hop_eo_fn=None,
+                    backend=None, backend_opts=None):
     """Solve ``D_W xi = eta`` via the even-odd Schur system (Eqs. 4-5).
 
     Returns ``(xi_e, xi_o, SolveResult)``.  For the Wilson matrix
     ``D_ee = D_oo = 1`` so the reconstruction is Eq. (5) with trivial
     inverses.
+
+    The operator implementation is chosen by ``backend`` — a name from
+    :mod:`repro.backends` (``"jnp"``, ``"pallas"``, ``"pallas_fused"``,
+    ``"distributed"``; ``backend_opts`` are forwarded to the factory) or
+    an already-bound :class:`repro.backends.WilsonOps` (so callers
+    solving repeatedly against one gauge field bind once, keeping jit
+    caches and the planarized gauge warm across solves).  Explicitly
+    passed ``*_fn`` callables win over the backend, keeping the old
+    hand-wiring possible.
     """
     from . import evenodd  # local import to avoid cycle
+
+    if backend is not None:
+        from repro import backends as backends_lib  # avoid import cycle
+        bops = (backend if isinstance(backend, backends_lib.WilsonOps)
+                else backends_lib.make_wilson_ops(
+                    backend, U_e, U_o, **(backend_opts or {})))
+        hop_oe_fn = hop_oe_fn or (lambda ue, uo, p: bops.hop_oe(p))
+        hop_eo_fn = hop_eo_fn or (lambda ue, uo, p: bops.hop_eo(p))
+        apply_dhat_fn = apply_dhat_fn or (
+            lambda v: bops.apply_dhat(v, kappa))
+        apply_dhat_dag_fn = apply_dhat_dag_fn or (
+            lambda v: bops.apply_dhat_dagger(v, kappa))
 
     hop_oe_fn = hop_oe_fn or evenodd.hop_oe
     hop_eo_fn = hop_eo_fn or evenodd.hop_eo

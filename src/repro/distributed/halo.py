@@ -19,15 +19,17 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 AxisNames = Union[str, Tuple[str, ...]]
 
 
 def _axis_size(axes: AxisNames) -> int:
     if isinstance(axes, str):
-        return lax.axis_size(axes)
+        return compat.axis_size(axes)
     n = 1
     for a in axes:
-        n *= lax.axis_size(a)
+        n *= compat.axis_size(a)
     return n
 
 
@@ -37,7 +39,7 @@ def axis_index(axes: AxisNames) -> jnp.ndarray:
         return lax.axis_index(axes)
     idx = jnp.int32(0)
     for a in axes:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * compat.axis_size(a) + lax.axis_index(a)
     return idx
 
 

@@ -9,7 +9,8 @@ import jax.numpy as jnp
 
 from repro.core import evenodd
 from . import layout
-from .wilson_stencil import hop_block_planar
+from .wilson_stencil import (dhat_planar_fused, fused_dhat_fits,
+                             hop_block_planar)
 
 
 @functools.partial(jax.jit, static_argnames=("out_parity", "halo", "interpret"))
@@ -62,3 +63,37 @@ def apply_dhat_planar(u_e_p, u_o_p, psi_e_p, kappa: float, *,
     out = hop_block_planar(u_e_p, u_o_p, tmp, evenodd.EVEN,
                            interpret=interpret)
     return psi_e_p - jnp.asarray(float(kappa) ** 2, psi_e_p.dtype) * out
+
+
+@functools.partial(jax.jit, static_argnames=("kappa", "interpret"))
+def apply_dhat_planar_fused(u_e_p, u_o_p, psi_e_p, kappa: float, *,
+                            interpret: Optional[bool] = None):
+    """Even-odd preconditioned operator as ONE Pallas kernel (jit'd).
+
+    Unlike :func:`apply_dhat_planar` — two ``pallas_call``s with the odd
+    intermediate round-tripping through HBM between them — this runs both
+    hopping blocks and the axpy epilogue in a single kernel with the
+    intermediate resident in VMEM scratch.  Falls back is the caller's
+    job: see :func:`repro.kernels.wilson_stencil.fused_dhat_fits`.
+    """
+    return dhat_planar_fused(u_e_p, u_o_p, psi_e_p, kappa,
+                             interpret=interpret)
+
+
+def apply_dhat_kernel(u_e_p, u_o_p, psi_e, kappa: float, *, fused=None,
+                      interpret: Optional[bool] = None):
+    """Complex-interface Dhat: planar conversion + Pallas inside.
+
+    ``fused=None`` auto-selects the single-kernel path whenever its
+    VMEM-resident intermediate fits the budget.
+    """
+    src_p = layout.spinor_to_planar(psi_e, dtype=u_e_p.dtype)
+    if fused is None:
+        fused = fused_dhat_fits(src_p.shape, src_p.dtype.itemsize)
+    if fused:
+        out_p = apply_dhat_planar_fused(u_e_p, u_o_p, src_p, kappa,
+                                        interpret=interpret)
+    else:
+        out_p = apply_dhat_planar(u_e_p, u_o_p, src_p, kappa,
+                                  interpret=interpret)
+    return layout.spinor_from_planar(out_p, dtype=psi_e.dtype)

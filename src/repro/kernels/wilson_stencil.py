@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
 from .layout import GAUGE_COMPS, SPINOR_COMPS
 
 # Flops per lattice site of one hopping block application, QXS convention.
@@ -128,6 +129,46 @@ def _recon_acc(acc, uh, mu: int, s: int):
             add(3, a, _sgn(s, h1r), _sgn(s, h1i))
 
 
+def _hop_plane(p, pzp, pzm, ptp, ptm, u_out, ux, uy, uz, ut,
+               tz_par, out_parity: int):
+    """One hopping block on a single (Y, Xh) site plane; returns the 24
+    accumulator planes.
+
+    ``p`` is the center source plane ``(24, Y, Xh)``; ``pzp/pzm/ptp/ptm``
+    the z/t neighbor planes; ``u_out`` the output-parity gauge
+    ``(4, 18, Y, Xh)``; ``ux/uy/uz/ut`` the source-parity gauge planes the
+    backward hops read (``uz/ut`` already shifted to z-1 / t-1).  x/y
+    neighbors are in-register rolls of the center plane (the paper's
+    sel/tbl/ext sequence), so no operands are needed for them.
+    """
+    Y, Xh = p.shape[-2], p.shape[-1]
+
+    # Row parity (t+z+y) % 2 — the predicate of the paper's `sel`.
+    row = (jax.lax.broadcasted_iota(jnp.int32, (Y, Xh), 0) + tz_par) % 2
+    mask_f = row == (out_parity + 1) % 2   # rows whose +x neighbor is at xh+1
+    mask_b = row == out_parity % 2         # rows whose -x neighbor is at xh-1
+
+    # In-register stencil shifts (sel/tbl/ext analogues).
+    psi_xf = jnp.where(mask_f, pltpu_roll(p, -1, -1), p)
+    psi_xb = jnp.where(mask_b, pltpu_roll(p, +1, -1), p)
+    psi_yf = pltpu_roll(p, -1, -2)
+    psi_yb = pltpu_roll(p, +1, -2)
+    u_xb = jnp.where(mask_b, pltpu_roll(ux, +1, -1), ux)
+    u_yb = pltpu_roll(uy, +1, -2)
+
+    acc = [None] * SPINOR_COMPS
+    hops = [(psi_xf, psi_xb, u_xb), (psi_yf, psi_yb, u_yb),
+            (pzp, pzm, uz), (ptp, ptm, ut)]
+    for mu, (pf, pb, ub) in enumerate(hops):
+        # Forward: (1 - g_mu) U_mu(x) psi(x + mu).
+        uh = _su3_mul(u_out[mu], _proj(pf, mu, -1), dagger=False)
+        _recon_acc(acc, uh, mu, -1)
+        # Backward: (1 + g_mu) U_mu^dag(x - mu) psi(x - mu).
+        uh = _su3_mul(ub, _proj(pb, mu, +1), dagger=True)
+        _recon_acc(acc, uh, mu, +1)
+    return acc
+
+
 def _hop_kernel(*refs, out_parity: int, axpy_coeff: Optional[float]):
     """Kernel body; operates on one (Y, Xh) plane of the lattice."""
     if axpy_coeff is not None:
@@ -139,39 +180,11 @@ def _hop_kernel(*refs, out_parity: int, axpy_coeff: Optional[float]):
         psi0 = None
 
     p = pc[0, 0]                      # (24, Y, Xh)
-    Y, Xh = p.shape[-2], p.shape[-1]
     compute_dtype = p.dtype
-
-    # Row parity (t+z+y) % 2 — the predicate of the paper's `sel`.
-    tz_par = par_ref[0, 0]
-    row = (jax.lax.broadcasted_iota(jnp.int32, (Y, Xh), 0) + tz_par) % 2
-    mask_f = row == (out_parity + 1) % 2   # rows whose +x neighbor is at xh+1
-    mask_b = row == out_parity % 2         # rows whose -x neighbor is at xh-1
-
-    # In-register stencil shifts (sel/tbl/ext analogues).
-    psi_xf = jnp.where(mask_f, pltpu_roll(p, -1, -1), p)
-    psi_xb = jnp.where(mask_b, pltpu_roll(p, +1, -1), p)
-    psi_yf = pltpu_roll(p, -1, -2)
-    psi_yb = pltpu_roll(p, +1, -2)
-    psi_zf, psi_zb = pzp[0, 0], pzm[0, 0]
-    psi_tf, psi_tb = ptp[0, 0], ptm[0, 0]
-
-    u_out = uo[:, 0, 0]               # (4, 18, Y, Xh)
-    ux, uy = uix[0, 0, 0], uiy[0, 0, 0]
-    uz, ut = uizm[0, 0, 0], uitm[0, 0, 0]
-    u_xb = jnp.where(mask_b, pltpu_roll(ux, +1, -1), ux)
-    u_yb = pltpu_roll(uy, +1, -2)
-
-    acc = [None] * SPINOR_COMPS
-    hops = [(psi_xf, psi_xb, u_xb), (psi_yf, psi_yb, u_yb),
-            (psi_zf, psi_zb, uz), (psi_tf, psi_tb, ut)]
-    for mu, (pf, pb, ub) in enumerate(hops):
-        # Forward: (1 - g_mu) U_mu(x) psi(x + mu).
-        uh = _su3_mul(u_out[mu], _proj(pf, mu, -1), dagger=False)
-        _recon_acc(acc, uh, mu, -1)
-        # Backward: (1 + g_mu) U_mu^dag(x - mu) psi(x - mu).
-        uh = _su3_mul(ub, _proj(pb, mu, +1), dagger=True)
-        _recon_acc(acc, uh, mu, +1)
+    acc = _hop_plane(p, pzp[0, 0], pzm[0, 0], ptp[0, 0], ptm[0, 0],
+                     uo[:, 0, 0], uix[0, 0, 0], uiy[0, 0, 0],
+                     uizm[0, 0, 0], uitm[0, 0, 0],
+                     par_ref[0, 0], out_parity)
 
     result = jnp.stack(acc).astype(compute_dtype)
     if axpy_coeff is not None:
@@ -349,8 +362,179 @@ def hop_block_planar(u_out_p: jnp.ndarray, u_in_p: jnp.ndarray,
         out_specs=out_spec,
         interpret=interpret,
         cost_estimate=cost,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary")),
         name=f"wilson_hop_{'oe' if out_parity else 'eo'}",
     )
     return fn(*operands)
+
+
+# ---------------------------------------------------------------------------
+# Fused even-odd preconditioned operator: Dhat in ONE pallas_call.
+# ---------------------------------------------------------------------------
+
+# Conservative VMEM budget for the resident intermediate (v4/v5 cores have
+# ~16 MiB; leave room for the pipelined operand/output blocks).
+_FUSED_SCRATCH_LIMIT_BYTES = 12 << 20
+
+
+def _dhat_kernel(par_ref, pc, pzp, pzm, ptp, ptm,
+                 ue_all, ue_zm, ue_tm, uo_all, uo_zm, uo_tm,
+                 out_ref, tmp_ref, *, kappa2: float, Tl: int, Zl: int):
+    """Fused ``Dhat = 1 - kappa^2 H_eo H_oe`` over grid ``(2, T, Z)``.
+
+    Pass 0 (``s == 0``) computes the odd-parity intermediate
+    ``tmp = H_oe psi_e`` plane by plane into a full-lattice VMEM scratch;
+    pass 1 re-walks the grid applying ``H_eo`` to the scratch (z/t
+    neighbor planes are VMEM reads with periodic wrap) and writes the
+    fused ``psi0 - kappa^2 * (...)`` epilogue.  The intermediate spinor
+    never exists in HBM — the round-trip the two-call
+    ``apply_dhat_planar`` pays is gone (QWS applies the same fusion on
+    A64FX; cf. Kanamori & Matsufuru on keeping intermediates
+    SIMD-resident).
+    """
+    s = pl.program_id(0)
+    t = pl.program_id(1)
+    z = pl.program_id(2)
+    tz_par = par_ref[0, 0]
+    p = pc[0, 0]                      # psi_e center plane (24, Y, Xh)
+    compute_dtype = p.dtype
+
+    @pl.when(s == 0)
+    def _pass_hoe():
+        acc = _hop_plane(p, pzp[0, 0], pzm[0, 0], ptp[0, 0], ptm[0, 0],
+                         uo_all[:, 0, 0],
+                         ue_all[0, 0, 0], ue_all[1, 0, 0],
+                         ue_zm[0, 0, 0], ue_tm[0, 0, 0],
+                         tz_par, 1)
+        tmp_ref[t, z] = jnp.stack(acc).astype(compute_dtype)
+
+    @pl.when(s == 1)
+    def _pass_heo_axpy():
+        tc = tmp_ref[t, z]
+        tzp = tmp_ref[t, (z + 1) % Zl]
+        tzm = tmp_ref[t, (z - 1) % Zl]
+        ttp = tmp_ref[(t + 1) % Tl, z]
+        ttm = tmp_ref[(t - 1) % Tl, z]
+        acc = _hop_plane(tc, tzp, tzm, ttp, ttm,
+                         ue_all[:, 0, 0],
+                         uo_all[0, 0, 0], uo_all[1, 0, 0],
+                         uo_zm[0, 0, 0], uo_tm[0, 0, 0],
+                         tz_par, 0)
+        hop2 = jnp.stack(acc).astype(compute_dtype)
+        out_ref[0, 0] = p - compute_dtype.type(kappa2) * hop2
+
+
+def dhat_planar_fused(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
+                      psi_e_p: jnp.ndarray, kappa: float, *,
+                      tz_offset: Tuple[int, int] = (0, 0),
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """``(1 - kappa^2 H_eo H_oe) psi_e`` as a single Pallas kernel.
+
+    Both hopping blocks and the axpy epilogue run inside one
+    ``pallas_call``; the odd intermediate lives in a full-lattice VMEM
+    scratch for the whole invocation, so versus the two-call
+    ``apply_dhat_planar`` path one spinor HBM write + pipelined re-read
+    (5 planes per grid step) is eliminated.  Periodic single-shard only
+    (the distributed path keeps the two-call structure so halos can
+    overlap).
+
+    The scratch is the whole odd-parity spinor: ``24 * T*Z*Y*Xh`` floats.
+    On a real TPU that caps the local volume (~12 MiB budget, e.g.
+    32x32x32x32 f32 exceeds it); callers should fall back to the unfused
+    path above that — :func:`fused_dhat_fits` tells you.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Tl, Zl, _, Y, Xh = psi_e_p.shape
+    t0, z0 = tz_offset
+
+    tmp_bytes = psi_e_p.dtype.itemsize * SPINOR_COMPS * Tl * Zl * Y * Xh
+    if not interpret and tmp_bytes > _FUSED_SCRATCH_LIMIT_BYTES:
+        raise ValueError(
+            f"fused Dhat intermediate needs {tmp_bytes} B of VMEM scratch "
+            f"(> {_FUSED_SCRATCH_LIMIT_BYTES}); use the unfused "
+            "apply_dhat_planar path for this local volume")
+
+    par = ((jnp.arange(Tl, dtype=jnp.int32)[:, None] + t0)
+           + (jnp.arange(Zl, dtype=jnp.int32)[None, :] + z0)) % 2
+
+    sblk = (1, 1, SPINOR_COMPS, Y, Xh)
+    gblk1 = (1, 1, 1, GAUGE_COMPS, Y, Xh)
+
+    def s(im):
+        return pl.BlockSpec(sblk, im)
+
+    def g(im):
+        return pl.BlockSpec(gblk1, im)
+
+    # Operands read by only one pass collapse to block (0, 0) in the
+    # other pass (multiply the index by ``1 - s`` or ``s``): the block
+    # index then stays constant across the dead pass's grid steps, so the
+    # pipeliner fetches it once instead of streaming a full dead volume
+    # from HBM — without this, pass 1 would re-fetch all four psi
+    # neighbor planes it never reads and the fusion's HBM saving mostly
+    # evaporates.
+    psi_specs = [
+        s(lambda _, t, z: (t, z, 0, 0, 0)),   # center: psi0 in pass 1
+        s(lambda s_, t, z: (t * (1 - s_), ((z + 1) % Zl) * (1 - s_),
+                            0, 0, 0)),
+        s(lambda s_, t, z: (t * (1 - s_), ((z - 1) % Zl) * (1 - s_),
+                            0, 0, 0)),
+        s(lambda s_, t, z: (((t + 1) % Tl) * (1 - s_), z * (1 - s_),
+                            0, 0, 0)),
+        s(lambda s_, t, z: (((t - 1) % Tl) * (1 - s_), z * (1 - s_),
+                            0, 0, 0)),
+    ]
+
+    def gauge_specs(live):
+        # ``live(s)`` is 1 in the pass that reads the shifted planes.
+        return [
+            pl.BlockSpec((4, 1, 1, GAUGE_COMPS, Y, Xh),
+                         lambda _, t, z: (0, t, z, 0, 0, 0)),
+            g(lambda s_, t, z: (2, t * live(s_),
+                                ((z - 1) % Zl) * live(s_), 0, 0, 0)),
+            g(lambda s_, t, z: (3, ((t - 1) % Tl) * live(s_),
+                                z * live(s_), 0, 0, 0)),
+        ]
+
+    par_spec = pl.BlockSpec((1, 1), lambda _, t, z: (t, z),
+                            memory_space=pltpu.SMEM)
+    in_specs = ([par_spec] + psi_specs
+                + gauge_specs(lambda s_: 1 - s_)    # u_e shifts: pass 0
+                + gauge_specs(lambda s_: s_))       # u_o shifts: pass 1
+    out_spec = s(lambda _, t, z: (t, z, 0, 0, 0))
+
+    bytes_spinor = psi_e_p.dtype.itemsize * SPINOR_COMPS * Y * Xh * Tl * Zl
+    bytes_gauge = u_e_p.dtype.itemsize * 4 * GAUGE_COMPS * Y * Xh * Tl * Zl
+    cost = pl.CostEstimate(
+        flops=2 * HOP_FLOPS_PER_SITE * Tl * Zl * Y * Xh
+        + 2 * SPINOR_COMPS * Tl * Zl * Y * Xh,
+        bytes_accessed=2 * bytes_spinor + 4 * bytes_gauge,
+        transcendentals=0)
+
+    kernel = functools.partial(_dhat_kernel, kappa2=float(kappa) ** 2,
+                               Tl=Tl, Zl=Zl)
+    fn = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((Tl, Zl, SPINOR_COMPS, Y, Xh),
+                                       psi_e_p.dtype),
+        grid=(2, Tl, Zl),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        scratch_shapes=[pltpu.VMEM((Tl, Zl, SPINOR_COMPS, Y, Xh),
+                                   psi_e_p.dtype)],
+        interpret=interpret,
+        cost_estimate=cost,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        name="wilson_dhat_fused",
+    )
+    return fn(par, psi_e_p, psi_e_p, psi_e_p, psi_e_p, psi_e_p,
+              u_e_p, u_e_p, u_e_p, u_o_p, u_o_p, u_o_p)
+
+
+def fused_dhat_fits(psi_e_p_shape, itemsize: int = 4) -> bool:
+    """Whether the fused kernel's VMEM-resident intermediate fits."""
+    Tl, Zl, comps, Y, Xh = psi_e_p_shape
+    return itemsize * comps * Tl * Zl * Y * Xh <= _FUSED_SCRATCH_LIMIT_BYTES

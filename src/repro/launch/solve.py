@@ -16,12 +16,10 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro import configs
+from repro import backends, configs
 from repro.checkpoint.ckpt import Checkpointer
 from repro.core import evenodd, solver, su3, wilson
-from repro.kernels import layout, ops
 
 
 def main(argv=None):
@@ -32,7 +30,9 @@ def main(argv=None):
     ap.add_argument("--method", default="cgnr",
                     choices=["cgnr", "bicgstab"])
     ap.add_argument("--backend", default="auto",
-                    choices=["auto", "jnp", "pallas"])
+                    choices=["auto"] + backends.available_backends(),
+                    help="operator backend (registry name); 'auto' picks "
+                         "jnp off-TPU and pallas_fused on TPU")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--restart-every", type=int, default=0,
                     help="simulate failure/restart every N solves")
@@ -47,12 +47,14 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     U = su3.random_gauge(key, lat.shape)
     Ue, Uo = evenodd.pack_gauge(U)
-    use_pallas = args.backend == "pallas"
-    hop_oe_fn = hop_eo_fn = None
-    if use_pallas:
-        Uep, Uop = ops.make_planar_fields(Ue, Uo)
-        hop_oe_fn = lambda ue, uo, pe: ops.hop_oe_kernel(Uep, Uop, pe)
-        hop_eo_fn = lambda ue, uo, po: ops.hop_eo_kernel(Uep, Uop, po)
+    backend = args.backend
+    if backend == "auto":
+        backend = ("pallas_fused" if jax.default_backend() == "tpu"
+                   else "jnp")
+    print(f"backend {backend}")
+    # bind once: keeps the planarized gauge, partitioning, and jit
+    # caches warm across the whole batch of solves
+    bops = backends.make_wilson_ops(backend, Ue, Uo)
 
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
 
@@ -66,7 +68,7 @@ def main(argv=None):
         t0 = time.time()
         xe, xo, res = solver.solve_wilson_eo(
             Ue, Uo, ee, eo, args.kappa, method=args.method, tol=args.tol,
-            hop_oe_fn=hop_oe_fn, hop_eo_fn=hop_eo_fn)
+            backend=bops)
         xi = evenodd.unpack(xe, xo)
         r = eta - wilson.apply_wilson(U, xi, args.kappa)
         rel = float(jnp.linalg.norm(r) / jnp.linalg.norm(eta))

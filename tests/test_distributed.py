@@ -40,8 +40,8 @@ def test_distributed_dhat_all_modes():
         Uep, Uop = ops.make_planar_fields(Ue, Uo)
         ep = layout.spinor_to_planar(e)
         want = ref.apply_dhat_planar_ref(Uep, Uop, ep, 0.13)
-        mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro import compat
+        mesh = compat.make_mesh((2,2,2), ("pod","data","model"))
         for backend in ("jnp","pallas"):
             for overlap in ("fused","split"):
                 part = qcd.QCDPartition.for_mesh(
@@ -71,8 +71,8 @@ def test_distributed_solver_matches_single():
         Ue, Uo = evenodd.pack_gauge(U)
         ee, eo = evenodd.pack(eta)
         kappa = 0.12
-        mesh = jax.make_mesh((4,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro import compat
+        mesh = compat.make_mesh((4,2), ("data","model"))
         part = qcd.QCDPartition.for_mesh(mesh, backend="jnp")
         Uep, Uop = ops.make_planar_fields(Ue, Uo)
         Uep = jax.device_put(Uep, part.gauge_sharding())
@@ -102,15 +102,15 @@ def test_compressed_psum_tree():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
         from repro.distributed import compress
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro import compat
+        mesh = compat.make_mesh((8,), ("data",))
         g = {"w": jax.random.normal(jax.random.PRNGKey(0), (8, 512, 16)),
              "b": jax.random.normal(jax.random.PRNGKey(1), (8, 32))}
         res = {"w": jnp.zeros((512,16)), "b": jnp.zeros((32,))}
         def f(g, r):
             m, r2 = compress.compressed_psum_tree(g, "data", r)
             return m, r2
-        fm = jax.jit(jax.shard_map(f, mesh=mesh,
+        fm = jax.jit(compat.shard_map(f, mesh=mesh,
                      in_specs=({"w": P("data"), "b": P("data")},
                                {"w": P(), "b": P()}),
                      out_specs=(P(), P()), check_vma=False))

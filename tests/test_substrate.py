@@ -51,11 +51,12 @@ def test_checkpoint_restore_resharded(tmp_path):
     """Restore places leaves with the given shardings (elastic restart)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro import compat
+
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     ck = Checkpointer(str(tmp_path), async_save=False)
     ck.save(3, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     out, _, _ = ck.restore(tree, shardings=sh)
     assert out["w"].sharding.is_equivalent_to(sh["w"], 2)
