@@ -9,7 +9,11 @@ shuffle version contains no gathers.
 
 Also times the fused single-kernel ``Dhat`` (odd intermediate resident in
 VMEM scratch) against the unfused two-``pallas_call`` path that
-round-trips the intermediate through HBM.
+round-trips the intermediate through HBM, and isolates the per-call
+layout-conversion + device-placement tax the old complex-interface
+operators paid versus the native-domain path the solver now iterates on.
+
+Rows are printed as CSV and mirrored to ``BENCH_breakdown.json``.
 """
 from __future__ import annotations
 
@@ -18,10 +22,25 @@ import re
 import jax
 import jax.numpy as jnp
 
+from repro import backends
 from repro.core import evenodd, su3
 from repro.kernels import layout, ops
-from .common import Row, time_fn
+from .common import Row, smoke, time_fn, write_json
 from .naive_gather import hop_block_gather
+
+
+def _timing_kw():
+    return {"warmup": 1, "iters": 3} if smoke() else {}
+
+
+def _rand_eo(shape, seed):
+    U = su3.random_gauge(jax.random.PRNGKey(seed), shape)
+    psi = (jax.random.normal(jax.random.PRNGKey(seed + 1), (*shape, 4, 3))
+           + 1j * jax.random.normal(jax.random.PRNGKey(seed + 2),
+                                    (*shape, 4, 3))).astype(jnp.complex64)
+    Ue, Uo = evenodd.pack_gauge(U)
+    e, _ = evenodd.pack(psi)
+    return Ue, Uo, e
 
 
 def _hlo_census(fn, *args) -> dict:
@@ -38,14 +57,8 @@ def _hlo_census(fn, *args) -> dict:
 
 def run() -> list:
     rows: list[Row] = []
-    T, Z, Y, X = 8, 8, 8, 16
-    U = su3.random_gauge(jax.random.PRNGKey(0), (T, Z, Y, X))
-    psi = (jax.random.normal(jax.random.PRNGKey(1), (T, Z, Y, X, 4, 3))
-           + 1j * jax.random.normal(jax.random.PRNGKey(2),
-                                    (T, Z, Y, X, 4, 3))
-           ).astype(jnp.complex64)
-    Ue, Uo = evenodd.pack_gauge(U)
-    e, _ = evenodd.pack(psi)
+    T, Z, Y, X = (4, 4, 4, 8) if smoke() else (8, 8, 8, 16)
+    Ue, Uo, e = _rand_eo((T, Z, Y, X), seed=0)
 
     shuffle_fn = jax.jit(
         lambda a, b, c: evenodd.hop_block(a, b, c, evenodd.ODD))
@@ -57,8 +70,8 @@ def run() -> list:
                               - gather_fn(Ue, Uo, e))))
     assert d < 1e-4, f"gather version diverges: {d}"
 
-    us_s = time_fn(shuffle_fn, Ue, Uo, e)
-    us_g = time_fn(gather_fn, Ue, Uo, e)
+    us_s = time_fn(shuffle_fn, Ue, Uo, e, **_timing_kw())
+    us_g = time_fn(gather_fn, Ue, Uo, e, **_timing_kw())
     vol = T * Z * Y * X
     rows.append(("breakdown_shuffle_hop", us_s,
                  f"gflops={660 * vol / (us_s * 1e-6) / 1e9:.2f}"))
@@ -74,6 +87,8 @@ def run() -> list:
     rows.append(("breakdown_gather_hlo_gathers", 0.0,
                  f"gather_ops={cg['gather']};select_ops={cg['select']}"))
     rows.extend(_dhat_fusion_rows())
+    rows.extend(_conversion_rows())
+    write_json("breakdown", rows)
     return rows
 
 
@@ -86,15 +101,9 @@ def _dhat_fusion_rows() -> list:
     re-read) is reported alongside.
     """
     rows: list[Row] = []
-    T, Z, Y, X = 8, 8, 8, 8
+    T, Z, Y, X = (4, 4, 4, 8) if smoke() else (8, 8, 8, 8)
     kappa = 0.13
-    U = su3.random_gauge(jax.random.PRNGKey(3), (T, Z, Y, X))
-    psi = (jax.random.normal(jax.random.PRNGKey(4), (T, Z, Y, X, 4, 3))
-           + 1j * jax.random.normal(jax.random.PRNGKey(5),
-                                    (T, Z, Y, X, 4, 3))
-           ).astype(jnp.complex64)
-    Ue, Uo = evenodd.pack_gauge(U)
-    e, _ = evenodd.pack(psi)
+    Ue, Uo, e = _rand_eo((T, Z, Y, X), seed=3)
     Uep, Uop = ops.make_planar_fields(Ue, Uo)
     ep = layout.spinor_to_planar(e)
 
@@ -108,8 +117,8 @@ def _dhat_fusion_rows() -> list:
     assert d < 1e-5, f"fused Dhat diverges from unfused: {d}"
 
     mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
-    us_u = time_fn(unfused_fn, Uep, Uop, ep)
-    us_f = time_fn(fused_fn, Uep, Uop, ep)
+    us_u = time_fn(unfused_fn, Uep, Uop, ep, **_timing_kw())
+    us_f = time_fn(fused_fn, Uep, Uop, ep, **_timing_kw())
     tmp_bytes = 4 * 24 * T * Z * Y * (X // 2)
     saved = tmp_bytes * 6  # 1 HBM write + 5 neighbor-plane re-reads
     rows.append(("breakdown_dhat_unfused", us_u,
@@ -117,4 +126,39 @@ def _dhat_fusion_rows() -> list:
     rows.append(("breakdown_dhat_fused", us_f,
                  f"mode={mode};speedup_vs_unfused={us_u / us_f:.2f}x;"
                  f"hbm_bytes_eliminated={saved}"))
+    return rows
+
+
+def _conversion_rows() -> list:
+    """Layout-conversion + placement tax per ``apply_dhat`` call.
+
+    The old complex-interface path pays ``spinor_to_planar`` /
+    ``spinor_from_planar`` (and, for the distributed backend, a
+    ``device_put``) on *every* operator application; the native-domain
+    path the solver now iterates on pays them once per solve.  The
+    difference between the two timed rows is exactly that per-call tax.
+    """
+    rows: list[Row] = []
+    shape = (4, 4, 4, 8) if smoke() else (8, 8, 8, 8)
+    kappa = 0.13
+    Ue, Uo, e = _rand_eo(shape, seed=7)
+    on_tpu = jax.default_backend() == "tpu"
+
+    cases = [("pallas_fused", {} if on_tpu else {"interpret": True}),
+             ("distributed", {})]
+    for name, opts in cases:
+        bops = backends.make_wilson_ops(name, Ue, Uo, **opts)
+        v = bops.to_domain(e)
+        complex_fn = lambda psi: bops.apply_dhat(psi, kappa)  # noqa: E731
+        native_fn = lambda w: bops.apply_dhat_native(w, kappa)  # noqa: E731
+        us_c = time_fn(complex_fn, e, **_timing_kw())
+        us_n = time_fn(native_fn, v, **_timing_kw())
+        mode = "tpu" if on_tpu else "interpret"
+        rows.append((f"breakdown_dhat_complex_iface_{name}", us_c,
+                     f"mode={mode};domain={bops.domain}"))
+        rows.append((f"breakdown_dhat_native_iface_{name}", us_n,
+                     f"mode={mode};domain={bops.domain};"
+                     f"conversion_overhead_us={us_c - us_n:.1f};"
+                     f"conversion_overhead_pct="
+                     f"{100.0 * (us_c - us_n) / max(us_c, 1e-9):.1f}"))
     return rows

@@ -2,7 +2,10 @@
 Schur solve (the paper's workload unit) on reduced paper volumes,
 CGNR vs BiCGStab, with the operator routed through the backend registry
 (off-TPU the kernel backends run the Pallas interpreter, so only the
-``jnp`` entry is timed there)."""
+``jnp`` entry is timed there).  Solves iterate in each backend's native
+vector domain — encode/decode happens once per solve, so these numbers
+include zero per-iteration layout-conversion tax (see bench_breakdown
+for that tax measured in isolation)."""
 from __future__ import annotations
 
 import time

@@ -1,12 +1,20 @@
 """Shared benchmark helpers. Output rows are ``name,us_per_call,derived``."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, List, Tuple
 
 import jax
 
 Row = Tuple[str, float, str]
+
+
+def smoke() -> bool:
+    """CI smoke mode: tiny volumes, few timing reps (set by run.py --smoke
+    or the REPRO_BENCH_SMOKE env var)."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -25,3 +33,36 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 def emit(rows: List[Row]):
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def write_json(bench: str, rows: List[Row]) -> str:
+    """Machine-readable mirror of the CSV rows: ``BENCH_<bench>.json``.
+
+    The ``derived`` field's ``k=v;k=v`` pairs are split out so downstream
+    tooling (perf dashboards, regression gates) need no string parsing.
+    Output directory: $REPRO_BENCH_DIR or the cwd.
+    """
+    def parse_derived(derived: str) -> dict:
+        out = {}
+        for part in derived.split(";"):
+            if "=" in part:
+                k, v = part.split("=", 1)
+                try:
+                    out[k] = float(v.rstrip("x"))
+                except ValueError:
+                    out[k] = v
+        return out
+
+    path = os.path.join(os.environ.get("REPRO_BENCH_DIR", "."),
+                        f"BENCH_{bench}.json")
+    payload = {
+        "bench": bench,
+        "jax_backend": jax.default_backend(),
+        "smoke": smoke(),
+        "rows": [{"name": name, "us_per_call": us, "derived": derived,
+                  **parse_derived(derived)}
+                 for name, us, derived in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path

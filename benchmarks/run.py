@@ -17,7 +17,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help=f"comma list from {BENCHES}")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny volumes / few reps (CI): numbers are not "
+                         "hardware-meaningful, only exercise the paths")
     args = ap.parse_args()
+    if args.smoke:
+        import os
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     which = args.only.split(",") if args.only else list(BENCHES)
 
     from .common import emit

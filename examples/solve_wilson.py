@@ -1,6 +1,9 @@
 """End-to-end driver example: batch of Wilson solves with checkpointing
 and a simulated failure + restart, plus an operator-backend sweep —
-backend choice is just a registry string (see repro.backends).
+backend choice is just a registry string (see repro.backends), and every
+solve iterates in the chosen backend's *native* vector domain (complex
+for jnp, planar for the Pallas kernels, sharded planar for distributed)
+with encode/decode only at solve entry/exit.
 
   PYTHONPATH=src python examples/solve_wilson.py
 """
@@ -20,6 +23,11 @@ def main():
     print("\n=== same solve through the fused-kernel backend ===")
     solve.main(["--lattice", "wilson-8x8x8x8", "--tol", "1e-5",
                 "--n-solves", "1", "--backend", "pallas_fused"])
+    print("\n=== sharded-native solve: spinors stay placed on the mesh "
+          "across all iterations ===")
+    solve.main(["--lattice", "wilson-8x8x8x8", "--tol", "1e-5",
+                "--n-solves", "1", "--backend", "distributed",
+                "--recompute-every", "25"])
 
 
 if __name__ == "__main__":

@@ -10,10 +10,30 @@ string name and exposes the same bound-operator interface:
     out   = bops.apply_dhat(psi_e, kappa)
 
 so backend choice is a config/CLI string instead of hand-wired
-callables.  All bound operators speak the *complex* even-odd interface
-(spinors ``(T, Z, Y, Xh, 4, 3)`` complex64); layout conversion to the
-kernel's planar form, gauge preprocessing, and device placement happen
-once at bind time inside the factory.
+callables.
+
+Every backend declares its **native vector domain** — the layout its
+kernels actually eat — and exposes an encode/decode boundary plus
+native-domain operators:
+
+    v    = bops.to_domain(psi)           # complex spinor -> native vector
+    w    = bops.apply_dhat_native(v, kappa)
+    psi2 = bops.from_domain(w)           # native vector -> complex spinor
+
+``"jnp"`` is native in the complex even-odd interface (spinors
+``(T, Z, Y, Xh, 4, 3)`` complex64, encode/decode are identity); the
+Pallas backends are native in the planar re/im layout
+(``(T, Z, 24, Y, Xh)`` float32, :mod:`repro.kernels.layout`); the
+``distributed`` backend's domain is a *sharded* planar vector, placed on
+the device mesh by ``to_domain`` so it stays there across calls.  Krylov
+solvers (:func:`repro.core.solver.solve_wilson_eo`) encode once at solve
+entry, iterate entirely in the native domain, and decode once at exit —
+no per-iteration layout churn or re-placement.
+
+The complex-interface methods (``hop_oe``/``hop_eo``/``apply_dhat``/
+``apply_dhat_dagger``) remain as thin ``from_domain . native . to_domain``
+wrappers for backward compatibility; gauge preprocessing and gauge
+placement still happen once at bind time inside the factory.
 
 Built-in entries (see :mod:`repro.backends.wilson`):
 
@@ -35,6 +55,10 @@ __all__ = ["WilsonOps", "register_backend", "get_backend",
            "available_backends", "make_wilson_ops"]
 
 
+def _identity(v):
+    return v
+
+
 @dataclasses.dataclass(frozen=True)
 class WilsonOps:
     """Hopping-block operators bound to one gauge configuration.
@@ -43,6 +67,13 @@ class WilsonOps:
     parity; ``apply_dhat(psi_e, kappa)`` is the even-odd preconditioned
     operator ``(1 - kappa^2 H_eo H_oe) psi_e``; ``apply_dhat_dagger`` its
     adjoint (gamma5-hermiticity).
+
+    ``domain`` names the backend's native vector layout;
+    ``to_domain``/``from_domain`` encode/decode between the complex
+    even-odd spinor interface and that layout, and the ``*_native``
+    operators work directly on native vectors.  Backends constructed the
+    pre-domain way (complex ops only) get an identity domain, so existing
+    third-party factories keep working unchanged.
     """
 
     backend: str
@@ -50,6 +81,68 @@ class WilsonOps:
     hop_eo: Callable        # psi_o -> psi_e
     apply_dhat: Callable    # (psi_e, kappa) -> psi_e
     apply_dhat_dagger: Callable
+    # --- native vector domain (encode once, iterate natively) ---------
+    domain: str = "complex"
+    to_domain: Callable = None      # psi -> v
+    from_domain: Callable = None    # v -> psi
+    hop_oe_native: Callable = None
+    hop_eo_native: Callable = None
+    apply_dhat_native: Callable = None
+    apply_dhat_dagger_native: Callable = None
+
+    def __post_init__(self):
+        # Legacy construction: complex interface IS the native domain.
+        defaults = {"to_domain": _identity, "from_domain": _identity,
+                    "hop_oe_native": self.hop_oe,
+                    "hop_eo_native": self.hop_eo,
+                    "apply_dhat_native": self.apply_dhat,
+                    "apply_dhat_dagger_native": self.apply_dhat_dagger}
+        given = [f for f in defaults if getattr(self, f) is not None]
+        if given and len(given) < len(defaults):
+            # A half-native construction would silently route complex
+            # ops into the native iteration path; fail loudly instead.
+            missing = sorted(set(defaults) - set(given))
+            raise ValueError(
+                f"backend {self.backend!r}: partial native-domain "
+                f"construction — also provide {missing} (or none of "
+                "the domain fields, for an identity domain); "
+                "WilsonOps.from_native builds a consistent set")
+        for field, default in defaults.items():
+            if getattr(self, field) is None:
+                object.__setattr__(self, field, default)
+
+    @classmethod
+    def from_native(cls, backend: str, *, domain: str,
+                    to_domain: Callable, from_domain: Callable,
+                    hop_oe: Callable, hop_eo: Callable,
+                    apply_dhat: Callable,
+                    apply_dhat_dagger: Callable) -> "WilsonOps":
+        """Build from native-domain operators; the complex-interface
+        methods become thin encode/op/decode wrappers."""
+
+        def wrap_hop(fn):
+            def wrapped(psi):
+                out = from_domain(fn(to_domain(psi)))
+                # preserve the caller's complex dtype (e.g. complex128
+                # under x64): the planar decode defaults to complex64
+                return out.astype(psi.dtype) if hasattr(psi, "dtype") else out
+            return wrapped
+
+        def wrap_dhat(fn):
+            def wrapped(psi, kappa):
+                out = from_domain(fn(to_domain(psi), kappa))
+                return out.astype(psi.dtype) if hasattr(psi, "dtype") else out
+            return wrapped
+
+        return cls(
+            backend=backend,
+            hop_oe=wrap_hop(hop_oe), hop_eo=wrap_hop(hop_eo),
+            apply_dhat=wrap_dhat(apply_dhat),
+            apply_dhat_dagger=wrap_dhat(apply_dhat_dagger),
+            domain=domain, to_domain=to_domain, from_domain=from_domain,
+            hop_oe_native=hop_oe, hop_eo_native=hop_eo,
+            apply_dhat_native=apply_dhat,
+            apply_dhat_dagger_native=apply_dhat_dagger)
 
 
 # name -> factory(U_e, U_o, **opts) -> WilsonOps

@@ -2,9 +2,23 @@
 distributed, all bound through :func:`repro.backends.register_backend`.
 
 Factories take the complex even/odd gauge halves ``(4, T, Z, Y, Xh, 3, 3)``
-and do their layout conversion / sharding once; the returned
-:class:`~repro.backends.WilsonOps` then works purely on complex even/odd
-spinors, so a solver written against one backend runs on any of them.
+and do their layout conversion / sharding once at bind time.  Each backend
+declares its native vector domain (:class:`~repro.backends.WilsonOps`):
+
+* ``"jnp"``          — native domain ``"complex"``; encode/decode are
+  identity.
+* ``"pallas"`` / ``"pallas_fused"`` — native domain ``"planar"``: the
+  re/im-separated ``(T, Z, 24, Y, Xh)`` float layout the kernel eats
+  (:mod:`repro.kernels.layout`).  The dagger acts on the planar
+  spin-component planes directly (gamma5 = sign flip of planes 12..23),
+  so native callers never touch complex arithmetic at all.
+* ``"distributed"``  — native domain ``"planar_sharded"``: a planar
+  vector placed on the device mesh by ``to_domain``; the operators run
+  on already-placed arrays, so a solver iterating natively pays zero
+  per-call ``device_put``/layout conversion.
+
+The complex-interface methods remain as encode/op/decode wrappers, so a
+solver written against one backend still runs on any of them.
 """
 from __future__ import annotations
 
@@ -31,6 +45,15 @@ def _dagger_via_gamma5(apply_dhat):
     return fn
 
 
+def _dagger_via_gamma5_planar(apply_dhat_native):
+    """``Dhat^dag = g5 Dhat g5`` natively on planar component planes."""
+    def fn(v, kappa):
+        return layout.gamma5_planar(
+            apply_dhat_native(layout.gamma5_planar(v), kappa))
+
+    return fn
+
+
 def make_jnp_backend(U_e, U_o, **_unused) -> WilsonOps:
     """Pure-XLA reference path (complex arithmetic end to end)."""
     def apply_dhat(psi_e, kappa):
@@ -41,7 +64,8 @@ def make_jnp_backend(U_e, U_o, **_unused) -> WilsonOps:
         hop_oe=lambda psi_e: evenodd.hop_oe(U_e, U_o, psi_e),
         hop_eo=lambda psi_o: evenodd.hop_eo(U_e, U_o, psi_o),
         apply_dhat=apply_dhat,
-        apply_dhat_dagger=_dagger_via_gamma5(apply_dhat))
+        apply_dhat_dagger=_dagger_via_gamma5(apply_dhat),
+        domain="complex")
 
 
 def _make_pallas(U_e, U_o, *, fused: Optional[bool],
@@ -49,18 +73,29 @@ def _make_pallas(U_e, U_o, *, fused: Optional[bool],
                  name: str) -> WilsonOps:
     u_e_p, u_o_p = ops.make_planar_fields(U_e, U_o)
 
-    def apply_dhat(psi_e, kappa):
-        return ops.apply_dhat_kernel(u_e_p, u_o_p, psi_e, kappa,
-                                     fused=fused, interpret=interpret)
+    def to_domain(psi):
+        return layout.spinor_to_planar(psi, dtype=u_e_p.dtype)
 
-    return WilsonOps(
-        backend=name,
-        hop_oe=lambda psi_e: ops.hop_oe_kernel(u_e_p, u_o_p, psi_e,
-                                               interpret=interpret),
-        hop_eo=lambda psi_o: ops.hop_eo_kernel(u_e_p, u_o_p, psi_o,
-                                               interpret=interpret),
-        apply_dhat=apply_dhat,
-        apply_dhat_dagger=_dagger_via_gamma5(apply_dhat))
+    def from_domain(v):
+        return layout.spinor_from_planar(v)
+
+    def hop_oe(v):
+        return ops.hop_block(u_o_p, u_e_p, v, out_parity=evenodd.ODD,
+                             interpret=interpret)
+
+    def hop_eo(v):
+        return ops.hop_block(u_e_p, u_o_p, v, out_parity=evenodd.EVEN,
+                             interpret=interpret)
+
+    def apply_dhat(v, kappa):
+        return ops.apply_dhat_planar_any(u_e_p, u_o_p, v, kappa,
+                                         fused=fused, interpret=interpret)
+
+    return WilsonOps.from_native(
+        name, domain="planar",
+        to_domain=to_domain, from_domain=from_domain,
+        hop_oe=hop_oe, hop_eo=hop_eo, apply_dhat=apply_dhat,
+        apply_dhat_dagger=_dagger_via_gamma5_planar(apply_dhat))
 
 
 def make_pallas_backend(U_e, U_o, *, interpret=None, **_unused) -> WilsonOps:
@@ -75,14 +110,14 @@ def make_pallas_fused_backend(U_e, U_o, *, interpret=None,
 
     Falls back to the two-kernel path automatically when the lattice's
     VMEM-resident intermediate exceeds the scratch budget
-    (``fused=None`` auto-select in :func:`repro.kernels.ops.apply_dhat_kernel`).
+    (``fused=None`` auto-select in :func:`repro.kernels.ops.apply_dhat_planar_any`).
     """
     return _make_pallas(U_e, U_o, fused=None, interpret=interpret,
                         name="pallas_fused")
 
 
 def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
-                             local_backend: str = "jnp",
+                             local_backend: str = "jnp_planar",
                              overlap: str = "fused",
                              interpret: Optional[bool] = None,
                              **_unused) -> WilsonOps:
@@ -91,9 +126,17 @@ def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
     Accepts an explicit :class:`repro.distributed.qcd.QCDPartition` (or a
     mesh to derive one from); defaults to all local devices on a
     ``(data, model)`` mesh.  The gauge field is planarized and placed with
-    the partition's sharding once, here; spinors are converted and placed
-    per call (convenience path — performance-critical callers should use
-    :mod:`repro.distributed.qcd` directly on planar sharded arrays).
+    the partition's sharding once, here.  The native domain is a *sharded
+    planar* spinor: ``to_domain`` planarizes and places onto the mesh,
+    after which the native operators run with no per-call conversion or
+    ``device_put`` — a natively-iterating solver keeps the field resident
+    on the mesh for the whole solve.  (The complex-interface methods
+    re-encode per call, as before.)
+
+    ``local_backend`` defaults to ``"jnp_planar"`` — the planar-native
+    pure-XLA stencil — so the per-rank compute is conversion-free too;
+    ``"jnp"`` (complex round-trip inside the shard, the old default) and
+    ``"pallas"`` remain selectable.
     """
     from repro.distributed import qcd  # local import: shard_map machinery
 
@@ -114,28 +157,30 @@ def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
                for p in (evenodd.EVEN, evenodd.ODD)}
     dhat_cache = {}
 
-    def _hop(out_parity, u_out_first):
-        def fn(psi):
-            p = jax.device_put(layout.spinor_to_planar(psi), sp_shard)
-            out = hop_fns[out_parity](*u_out_first, p)
-            return layout.spinor_from_planar(out, dtype=psi.dtype)
-        return fn
+    def to_domain(psi):
+        return jax.device_put(layout.spinor_to_planar(psi), sp_shard)
 
-    def apply_dhat(psi_e, kappa):
+    def from_domain(v):
+        return layout.spinor_from_planar(v)
+
+    def hop_oe(v):
+        # H_oe reads even-parity gauge links as u_in, writes odd sites.
+        return hop_fns[evenodd.ODD](u_o_p, u_e_p, v)
+
+    def hop_eo(v):
+        return hop_fns[evenodd.EVEN](u_e_p, u_o_p, v)
+
+    def apply_dhat(v, kappa):
         k = float(kappa)
         if k not in dhat_cache:
             dhat_cache[k] = jax.jit(qcd.make_dhat_fn(partition, k))
-        p = jax.device_put(layout.spinor_to_planar(psi_e), sp_shard)
-        out = dhat_cache[k](u_e_p, u_o_p, p)
-        return layout.spinor_from_planar(out, dtype=psi_e.dtype)
+        return dhat_cache[k](u_e_p, u_o_p, v)
 
-    return WilsonOps(
-        backend="distributed",
-        # H_oe reads even-parity gauge links as u_in, writes odd sites.
-        hop_oe=_hop(evenodd.ODD, (u_o_p, u_e_p)),
-        hop_eo=_hop(evenodd.EVEN, (u_e_p, u_o_p)),
-        apply_dhat=apply_dhat,
-        apply_dhat_dagger=_dagger_via_gamma5(apply_dhat))
+    return WilsonOps.from_native(
+        "distributed", domain="planar_sharded",
+        to_domain=to_domain, from_domain=from_domain,
+        hop_oe=hop_oe, hop_eo=hop_eo, apply_dhat=apply_dhat,
+        apply_dhat_dagger=_dagger_via_gamma5_planar(apply_dhat))
 
 
 register_backend("jnp", make_jnp_backend)

@@ -200,12 +200,11 @@ def make_dhat_dagger_fn(part: QCDPartition, kappa: float):
     gamma5 in the planar layout flips the sign of spin components 2,3
     (DeGrand-Rossi basis), i.e. planar components 12..23.
     """
+    from repro.kernels.layout import gamma5_planar
+
     dhat = make_dhat_fn(part, kappa)
-    sign = jnp.concatenate([jnp.ones((12,)), -jnp.ones((12,))])
-    sign = sign.reshape(1, 1, 24, 1, 1)
 
     def fn(u_e, u_o, psi_e):
-        g5psi = psi_e * sign.astype(psi_e.dtype)
-        return dhat(u_e, u_o, g5psi) * sign.astype(psi_e.dtype)
+        return gamma5_planar(dhat(u_e, u_o, gamma5_planar(psi_e)))
 
     return fn

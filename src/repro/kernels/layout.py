@@ -38,6 +38,18 @@ def spinor_from_planar(p: jnp.ndarray, dtype=jnp.complex64) -> jnp.ndarray:
     return (arr[..., 0] + 1j * arr[..., 1]).astype(dtype)
 
 
+def gamma5_planar(p: jnp.ndarray) -> jnp.ndarray:
+    """``gamma5 psi`` directly on a planar spinor ``(..., 24, Y, Xh)``.
+
+    ``gamma5 = diag(1, 1, -1, -1)`` in this basis, and the planar
+    component index is ``(spin * 3 + color) * 2 + reim``, so it simply
+    negates component planes 12..23 — no complex round-trip needed.
+    """
+    sign = jnp.concatenate([jnp.ones((12,), p.dtype),
+                            -jnp.ones((12,), p.dtype)])
+    return p * sign.reshape(SPINOR_COMPS, 1, 1)
+
+
 def gauge_to_planar(u: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
     """``(4, T, Z, Y, Xh, 3, 3)`` complex -> ``(4, T, Z, 18, Y, Xh)`` real."""
     _, T, Z, Y, Xh = u.shape[:5]

@@ -80,20 +80,27 @@ def apply_dhat_planar_fused(u_e_p, u_o_p, psi_e_p, kappa: float, *,
                              interpret=interpret)
 
 
-def apply_dhat_kernel(u_e_p, u_o_p, psi_e, kappa: float, *, fused=None,
-                      interpret: Optional[bool] = None):
-    """Complex-interface Dhat: planar conversion + Pallas inside.
+def apply_dhat_planar_any(u_e_p, u_o_p, src_p, kappa: float, *,
+                          fused=None,
+                          interpret: Optional[bool] = None):
+    """Planar-in/planar-out Dhat — the native-domain entry point.
 
     ``fused=None`` auto-selects the single-kernel path whenever its
     VMEM-resident intermediate fits the budget.
     """
-    src_p = layout.spinor_to_planar(psi_e, dtype=u_e_p.dtype)
     if fused is None:
         fused = fused_dhat_fits(src_p.shape, src_p.dtype.itemsize)
     if fused:
-        out_p = apply_dhat_planar_fused(u_e_p, u_o_p, src_p, kappa,
-                                        interpret=interpret)
-    else:
-        out_p = apply_dhat_planar(u_e_p, u_o_p, src_p, kappa,
-                                  interpret=interpret)
+        return apply_dhat_planar_fused(u_e_p, u_o_p, src_p, kappa,
+                                       interpret=interpret)
+    return apply_dhat_planar(u_e_p, u_o_p, src_p, kappa,
+                             interpret=interpret)
+
+
+def apply_dhat_kernel(u_e_p, u_o_p, psi_e, kappa: float, *, fused=None,
+                      interpret: Optional[bool] = None):
+    """Complex-interface Dhat: planar conversion + Pallas inside."""
+    src_p = layout.spinor_to_planar(psi_e, dtype=u_e_p.dtype)
+    out_p = apply_dhat_planar_any(u_e_p, u_o_p, src_p, kappa,
+                                  fused=fused, interpret=interpret)
     return layout.spinor_from_planar(out_p, dtype=psi_e.dtype)

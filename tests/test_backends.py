@@ -1,7 +1,9 @@
 """Operator-backend registry: resolution, error paths, and cross-backend
 agreement of the uniform hop_oe / hop_eo / apply_dhat interface —
 including the fused single-kernel Dhat vs the unfused two-kernel path
-(interpret mode off-TPU)."""
+(interpret mode off-TPU) — plus the native-domain boundary: encode/decode
+round trips, adjointness in both domains, and the zero-conversion /
+zero-replacement guarantees of natively-iterating solves."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,6 +12,15 @@ import pytest
 from repro import backends
 from repro.core import evenodd, su3
 from repro.kernels import layout, ops, ref
+
+BUILTIN_BACKENDS = ("jnp", "pallas", "pallas_fused", "distributed")
+
+
+def _bind(name, Ue, Uo):
+    """Bind a builtin backend, interpret-mode for Pallas off-TPU."""
+    opts = ({"interpret": True} if name.startswith("pallas")
+            and jax.default_backend() != "tpu" else {})
+    return backends.make_wilson_ops(name, Ue, Uo, **opts)
 
 
 def make_eo(shape, seed=0):
@@ -114,6 +125,156 @@ def test_distributed_backend_single_device(small_eo):
     np.testing.assert_allclose(
         np.asarray(bops.apply_dhat(e, kappa)),
         np.asarray(ref_ops.apply_dhat(e, kappa)), atol=1e-5)
+
+
+@pytest.mark.parametrize("name", BUILTIN_BACKENDS)
+def test_domain_roundtrip(name, small_eo):
+    """from_domain(to_domain(psi)) == psi for every backend's domain."""
+    Ue, Uo, e, _, _ = small_eo
+    bops = _bind(name, Ue, Uo)
+    assert bops.domain in ("complex", "planar", "planar_sharded")
+    np.testing.assert_array_equal(
+        np.asarray(bops.from_domain(bops.to_domain(e))), np.asarray(e))
+
+
+@pytest.mark.parametrize("name", BUILTIN_BACKENDS)
+def test_adjoint_property_complex_domain(name, small_eo):
+    """<x, Dhat y> == <Dhat^dag x, y> on the complex interface."""
+    Ue, Uo, e, o, kappa = small_eo
+    bops = _bind(name, Ue, Uo)
+    k = jax.random.PRNGKey(31)
+    x = (jax.random.normal(k, e.shape)
+         + 1j * jax.random.normal(jax.random.fold_in(k, 1), e.shape)
+         ).astype(jnp.complex64)
+    lhs = complex(jnp.vdot(x, bops.apply_dhat(e, kappa)))
+    rhs = complex(jnp.vdot(bops.apply_dhat_dagger(x, kappa), e))
+    assert abs(lhs - rhs) <= 1e-3 * max(abs(lhs), 1.0), (lhs, rhs)
+
+
+@pytest.mark.parametrize("name", BUILTIN_BACKENDS)
+def test_adjoint_property_native_domain(name, small_eo):
+    """Adjointness holds inside each backend's native domain too: the
+    native rep of Dhat^dag is the transpose of the native rep of Dhat
+    (real planar vdot == Re of the complex inner product)."""
+    Ue, Uo, e, _, kappa = small_eo
+    bops = _bind(name, Ue, Uo)
+    k = jax.random.PRNGKey(33)
+    x = (jax.random.normal(k, e.shape)
+         + 1j * jax.random.normal(jax.random.fold_in(k, 1), e.shape)
+         ).astype(jnp.complex64)
+    vx, vy = bops.to_domain(x), bops.to_domain(e)
+    lhs = complex(jnp.vdot(vx, bops.apply_dhat_native(vy, kappa)))
+    rhs = complex(jnp.vdot(bops.apply_dhat_dagger_native(vx, kappa), vy))
+    assert abs(lhs - rhs) <= 1e-3 * max(abs(lhs), 1.0), (lhs, rhs)
+    # native inner product == Re(complex inner product) for planar domains
+    if bops.domain != "complex":
+        want = complex(jnp.vdot(x, bops.apply_dhat(e, kappa))).real
+        assert abs(lhs.real - want) <= 1e-3 * max(abs(want), 1.0)
+
+
+@pytest.mark.parametrize("name", ["pallas", "pallas_fused"])
+def test_native_dhat_is_conversion_free(name, small_eo):
+    """The planar-native operator's trace contains no complex arithmetic
+    at all — so a solver iterating natively does zero spinor_to_planar /
+    spinor_from_planar conversions inside the Krylov loop."""
+    Ue, Uo, e, _, kappa = small_eo
+    bops = _bind(name, Ue, Uo)
+    v = bops.to_domain(e)
+    for fn in (lambda w: bops.apply_dhat_native(w, kappa),
+               lambda w: bops.apply_dhat_dagger_native(w, kappa),
+               bops.hop_oe_native):
+        txt = str(jax.make_jaxpr(fn)(v))
+        assert "c64" not in txt and "c128" not in txt, name
+        assert "complex" not in txt, name
+
+
+def test_distributed_native_ops_no_per_call_device_put(small_eo,
+                                                       monkeypatch):
+    """Sharded-native ops run on already-placed arrays: zero device_put
+    per application (placement happens once, in to_domain)."""
+    Ue, Uo, e, _, kappa = small_eo
+    bops = backends.make_wilson_ops("distributed", Ue, Uo)
+    v = bops.to_domain(e)
+    calls = []
+    orig = jax.device_put
+    monkeypatch.setattr(
+        jax, "device_put",
+        lambda *a, **kw: calls.append(1) or orig(*a, **kw))
+    jax.block_until_ready(bops.apply_dhat_native(v, kappa))
+    jax.block_until_ready(bops.apply_dhat_dagger_native(v, kappa))
+    jax.block_until_ready(bops.hop_oe_native(v))
+    jax.block_until_ready(bops.hop_eo_native(v))
+    assert not calls
+    bops.to_domain(e)    # the encode boundary is where placement lives
+    assert len(calls) == 1
+
+
+@pytest.mark.parametrize("name", BUILTIN_BACKENDS[1:])
+def test_native_solve_matches_complex_solve(name, small_eo):
+    """Acceptance: the natively-iterating solve agrees with the old
+    complex-interface hand-wired path to tolerance, and encodes/decodes
+    exactly once per solve (not once per iteration)."""
+    from repro.core import solver
+
+    Ue, Uo, e, o, kappa = small_eo
+    bops = _bind(name, Ue, Uo)
+
+    counts = {"to": 0, "from": 0}
+    orig_to, orig_from = layout.spinor_to_planar, layout.spinor_from_planar
+
+    def counting_to(*a, **kw):
+        counts["to"] += 1
+        return orig_to(*a, **kw)
+
+    def counting_from(*a, **kw):
+        counts["from"] += 1
+        return orig_from(*a, **kw)
+
+    layout.spinor_to_planar = counting_to
+    layout.spinor_from_planar = counting_from
+    try:
+        xe, xo, res = solver.solve_wilson_eo(
+            Ue, Uo, e, o, kappa, method="bicgstab", tol=1e-5, backend=bops)
+    finally:
+        layout.spinor_to_planar = orig_to
+        layout.spinor_from_planar = orig_from
+    assert int(res.iterations) > 1
+    # encode: eta_e + eta_o; decode: xi_e + xi_o — independent of iters.
+    assert counts["to"] == 2, counts
+    assert counts["from"] == 2, counts
+
+    # old complex-interface wiring through the same backend
+    xe_c, xo_c, _ = solver.solve_wilson_eo(
+        Ue, Uo, e, o, kappa, method="bicgstab", tol=1e-5,
+        apply_dhat_fn=lambda v: bops.apply_dhat(v, kappa),
+        hop_oe_fn=lambda ue, uo, p: bops.hop_oe(p),
+        hop_eo_fn=lambda ue, uo, p: bops.hop_eo(p))
+    np.testing.assert_allclose(np.asarray(xe), np.asarray(xe_c), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(xo), np.asarray(xo_c), atol=2e-4)
+
+
+def test_partial_native_construction_rejected():
+    """Providing some but not all domain fields would silently route
+    complex ops into the native path — it must fail loudly instead."""
+    with pytest.raises(ValueError, match="partial native-domain"):
+        backends.WilsonOps(
+            backend="half", hop_oe=lambda p: p, hop_eo=lambda p: p,
+            apply_dhat=lambda p, k: p, apply_dhat_dagger=lambda p, k: p,
+            domain="planar", to_domain=layout.spinor_to_planar,
+            from_domain=layout.spinor_from_planar)
+
+
+def test_legacy_complex_only_factory_gets_identity_domain():
+    """Third-party factories that predate the domain boundary still work:
+    construction with complex ops only yields an identity domain."""
+    marker = object()
+    bops = backends.WilsonOps(
+        backend="legacy", hop_oe=lambda p: p, hop_eo=lambda p: p,
+        apply_dhat=lambda p, k: p, apply_dhat_dagger=lambda p, k: p)
+    assert bops.domain == "complex"
+    assert bops.to_domain(marker) is marker
+    assert bops.from_domain(marker) is marker
+    assert bops.apply_dhat_native(marker, 0.1) is marker
 
 
 def test_solver_accepts_backend_string(small_eo):

@@ -1,0 +1,99 @@
+"""Round-trip, dtype, and component-ordering guarantees of the planar
+layout (kernels/layout.py) — the encode/decode boundary every native-
+domain solve crosses exactly once, guarded here against refactors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gamma, su3
+from repro.kernels import layout
+
+
+@pytest.fixture(scope="module")
+def spinor():
+    k = jax.random.PRNGKey(11)
+    psi = (jax.random.normal(k, (4, 6, 4, 8, 4, 3))
+           + 1j * jax.random.normal(jax.random.fold_in(k, 1),
+                                    (4, 6, 4, 8, 4, 3)))
+    return psi.astype(jnp.complex64)
+
+
+@pytest.fixture(scope="module")
+def gauge():
+    # (4, T, Z, Y, X=8, 3, 3); treated as the compacted Xh axis below
+    return su3.random_gauge(jax.random.PRNGKey(12), (4, 6, 4, 8))
+
+
+def test_spinor_roundtrip_exact(spinor):
+    """complex64 components are f32, so the f32 planar round trip is
+    bit-exact."""
+    p = layout.spinor_to_planar(spinor)
+    assert p.shape == (4, 6, layout.SPINOR_COMPS, 4, 8)
+    assert p.dtype == jnp.float32
+    back = layout.spinor_from_planar(p)
+    assert back.dtype == jnp.complex64
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(spinor))
+
+
+def test_gauge_roundtrip_exact(gauge):
+    p = layout.gauge_to_planar(gauge)
+    assert p.shape == (4, 4, 6, layout.GAUGE_COMPS, 4, 8)
+    assert p.dtype == jnp.float32
+    back = layout.gauge_from_planar(p)
+    assert back.dtype == jnp.complex64
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(gauge))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_planar_dtype_parameter(spinor, gauge, dtype):
+    """The planar dtype is caller-chosen (bf16 for the low-precision
+    experiments); decode honours the requested complex dtype."""
+    ps = layout.spinor_to_planar(spinor, dtype=dtype)
+    pg = layout.gauge_to_planar(gauge, dtype=dtype)
+    assert ps.dtype == dtype and pg.dtype == dtype
+    back = layout.spinor_from_planar(ps, dtype=jnp.complex64)
+    assert back.dtype == jnp.complex64
+    tol = 0 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(back), np.asarray(spinor),
+                               atol=tol)
+
+
+def test_spinor_component_ordering(spinor):
+    """c = (spin * 3 + color) * 2 + reim — the contract the kernel's
+    _c() accessor and gamma5_planar both assume."""
+    p = np.asarray(layout.spinor_to_planar(spinor))
+    src = np.asarray(spinor)
+    for spin, color, reim in ((0, 0, 0), (1, 2, 1), (3, 1, 0), (2, 0, 1)):
+        c = (spin * 3 + color) * 2 + reim
+        part = src[..., spin, color].real if reim == 0 else \
+            src[..., spin, color].imag
+        np.testing.assert_array_equal(p[:, :, c], part.astype(np.float32))
+
+
+def test_gauge_component_ordering(gauge):
+    """c = (row * 3 + col) * 2 + reim for the gauge planes."""
+    p = np.asarray(layout.gauge_to_planar(gauge))
+    src = np.asarray(gauge)
+    for row, col, reim in ((0, 0, 0), (2, 1, 1), (1, 2, 0)):
+        c = (row * 3 + col) * 2 + reim
+        part = src[..., row, col].real if reim == 0 else \
+            src[..., row, col].imag
+        np.testing.assert_array_equal(p[:, :, :, c],
+                                      part.astype(np.float32))
+
+
+def test_gamma5_planar_matches_complex_gamma5(spinor):
+    """gamma5 on planar planes == gamma5 in the complex basis."""
+    g5 = jnp.asarray(gamma.GAMMA5)
+    want = layout.spinor_to_planar(
+        jnp.einsum("ij,...jc->...ic", g5, spinor))
+    got = layout.gamma5_planar(layout.spinor_to_planar(spinor))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gamma5_planar_involution(spinor):
+    p = layout.spinor_to_planar(spinor)
+    np.testing.assert_array_equal(
+        np.asarray(layout.gamma5_planar(layout.gamma5_planar(p))),
+        np.asarray(p))

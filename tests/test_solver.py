@@ -76,6 +76,41 @@ def test_cg_iteration_monotone():
         prev = r
 
 
+def test_cg_recompute_every_converges_to_same_solution():
+    """Periodic true-residual recompute (SolverConfig.recompute_every)
+    doesn't change what CG converges to, and still converges."""
+    n = 64
+    key = jax.random.PRNGKey(3)
+    A = jax.random.normal(key, (n, n))
+    A = A @ A.T + n * jnp.eye(n)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    # tol within the f32 true-residual floor: the recomputed residual is
+    # honest where the recursive one drifts optimistically low.
+    plain = solver.cg(lambda v: A @ v, b, tol=1e-6, max_iters=500)
+    recomp = solver.cg(lambda v: A @ v, b, tol=1e-6, max_iters=500,
+                       recompute_every=4)
+    assert bool(recomp.converged)
+    np.testing.assert_allclose(np.asarray(recomp.x), np.asarray(plain.x),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("method", ["cgnr", "bicgstab"])
+def test_solve_wilson_recompute_every(small_lattice, small_eo, method):
+    """recompute_every threads through solve_wilson_eo (and SolverConfig)
+    into the while_loop'd Krylov solvers; the true solution comes back."""
+    U, _, kappa = small_lattice
+    Ue, Uo, ee, eo, _ = small_eo
+    cfg = solver.SolverConfig(tol=1e-6, max_iters=2000, recompute_every=7)
+    xe, xo, res = solver.solve_wilson_eo(Ue, Uo, ee, eo, kappa,
+                                         method=method, config=cfg)
+    assert bool(res.converged)
+    xi = evenodd.unpack(xe, xo)
+    eta = evenodd.unpack(ee, eo)
+    r = eta - wilson.apply_wilson(U, xi, kappa)
+    rel = float(jnp.linalg.norm(r) / jnp.linalg.norm(eta))
+    assert rel < 1e-4
+
+
 def test_even_odd_preconditioning_helps(small_lattice, small_eo):
     """The Schur system converges faster than unpreconditioned CGNR on
     the full D_W (the point of Eq. (4))."""
