@@ -3,6 +3,24 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--only tiling,breakdown,...]
+
+Each benchmark mirrors its rows to ``BENCH_<name>.json`` (see
+``common.write_json``) with the schema::
+
+    {"bench": str,            # benchmark name
+     "jax_backend": str,      # "cpu" | "tpu" | ...
+     "smoke": bool,           # tiny-volume CI mode
+     "rows": [{"name": str, "us_per_call": float, "derived": str,
+               <derived k=v pairs, floats parsed>...}]}
+
+``BENCH_multirhs.json`` rows carry the multi-RHS acceptance evidence:
+``multirhs_dhat_nrhs<N>`` (``per_rhs_us`` + ``model_*`` gauge-traffic
+amortization numbers), ``multirhs_gauge_load_invariance``
+(``pallas_calls_batched_hop=1``, nrhs-independent ``gauge_bytes_*``),
+``multirhs_batched_vs_sequential_<backend>`` (``max_col_rel_diff`` vs
+independent solves, every registered backend), and
+``multirhs_mixed_precision_f32_inner`` (``f64_applies_mixed`` <
+``f64_applies_pure`` at the same f64 tolerance).
 """
 from __future__ import annotations
 
@@ -10,7 +28,8 @@ import argparse
 import sys
 import traceback
 
-BENCHES = ("tiling", "breakdown", "halo", "solver", "scaling", "lm")
+BENCHES = ("tiling", "breakdown", "halo", "solver", "scaling", "lm",
+           "multirhs")
 
 
 def main() -> None:

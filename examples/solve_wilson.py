@@ -28,6 +28,14 @@ def main():
     solve.main(["--lattice", "wilson-8x8x8x8", "--tol", "1e-5",
                 "--n-solves", "1", "--backend", "distributed",
                 "--recompute-every", "25"])
+    print("\n=== multi-RHS: 4 sources in ONE batched Krylov solve (gauge "
+          "streamed once per application for the whole block) ===")
+    solve.main(["--lattice", "wilson-8x8x8x8", "--tol", "1e-5",
+                "--n-solves", "1", "--nrhs", "4", "--method", "bicgstab"])
+    print("\n=== mixed precision: f32 inner solves, f64 outer "
+          "iterative-refinement loop to 1e-10 ===")
+    solve.main(["--lattice", "wilson-8x8x8x8", "--tol", "1e-10",
+                "--n-solves", "1", "--inner-dtype", "f32"])
 
 
 if __name__ == "__main__":

@@ -59,6 +59,21 @@ def _identity(v):
     return v
 
 
+def _vmap1(fn):
+    """Batched fallback: vmap over the leading RHS axis (lazy import)."""
+    def batched(v):
+        import jax
+        return jax.vmap(fn)(v)
+    return batched
+
+
+def _vmap1_kappa(fn):
+    def batched(v, kappa):
+        import jax
+        return jax.vmap(fn, in_axes=(0, None))(v, kappa)
+    return batched
+
+
 @dataclasses.dataclass(frozen=True)
 class WilsonOps:
     """Hopping-block operators bound to one gauge configuration.
@@ -74,6 +89,15 @@ class WilsonOps:
     operators work directly on native vectors.  Backends constructed the
     pre-domain way (complex ops only) get an identity domain, so existing
     third-party factories keep working unchanged.
+
+    **Multi-RHS batching:** the ``*_batched`` fields are the batched
+    counterparts — a batched vector is the native vector with a *leading*
+    ``nrhs`` axis (batched complex spinor: ``(nrhs, T, Z, Y, Xh, 4, 3)``).
+    Backends with genuinely batched kernels (the Pallas stencils, which
+    load each gauge plane once per grid step for the whole block; the
+    distributed operator, which does one batched halo exchange) provide
+    them; everyone else gets a correct-but-unamortized ``jax.vmap``
+    fallback automatically, so batched solves work on any backend.
     """
 
     backend: str
@@ -89,6 +113,13 @@ class WilsonOps:
     hop_eo_native: Callable = None
     apply_dhat_native: Callable = None
     apply_dhat_dagger_native: Callable = None
+    # --- batched (multi-RHS) counterparts; leading nrhs axis ----------
+    to_domain_batched: Callable = None
+    from_domain_batched: Callable = None
+    hop_oe_native_batched: Callable = None
+    hop_eo_native_batched: Callable = None
+    apply_dhat_native_batched: Callable = None
+    apply_dhat_dagger_native_batched: Callable = None
 
     def __post_init__(self):
         # Legacy construction: complex interface IS the native domain.
@@ -110,15 +141,49 @@ class WilsonOps:
         for field, default in defaults.items():
             if getattr(self, field) is None:
                 object.__setattr__(self, field, default)
+        # Batched fallbacks: identity encodes stay identity (they are
+        # already shape-polymorphic); everything else vmaps the
+        # unbatched native op over the leading RHS axis.  Individually
+        # overridable — a backend with a truly batched kernel supplies
+        # its own (see WilsonOps.from_native / repro.backends.wilson).
+        batched_defaults = {
+            "to_domain_batched": (
+                self.to_domain if self.to_domain is _identity
+                else _vmap1(self.to_domain)),
+            "from_domain_batched": (
+                self.from_domain if self.from_domain is _identity
+                else _vmap1(self.from_domain)),
+            "hop_oe_native_batched": _vmap1(self.hop_oe_native),
+            "hop_eo_native_batched": _vmap1(self.hop_eo_native),
+            "apply_dhat_native_batched": _vmap1_kappa(self.apply_dhat_native),
+            "apply_dhat_dagger_native_batched":
+                _vmap1_kappa(self.apply_dhat_dagger_native),
+        }
+        for field, default in batched_defaults.items():
+            if getattr(self, field) is None:
+                object.__setattr__(self, field, default)
 
     @classmethod
     def from_native(cls, backend: str, *, domain: str,
                     to_domain: Callable, from_domain: Callable,
                     hop_oe: Callable, hop_eo: Callable,
                     apply_dhat: Callable,
-                    apply_dhat_dagger: Callable) -> "WilsonOps":
+                    apply_dhat_dagger: Callable,
+                    to_domain_batched: Callable = None,
+                    from_domain_batched: Callable = None,
+                    hop_oe_batched: Callable = None,
+                    hop_eo_batched: Callable = None,
+                    apply_dhat_batched: Callable = None,
+                    apply_dhat_dagger_batched: Callable = None
+                    ) -> "WilsonOps":
         """Build from native-domain operators; the complex-interface
-        methods become thin encode/op/decode wrappers."""
+        methods become thin encode/op/decode wrappers.
+
+        The optional ``*_batched`` operators take/return native vectors
+        with a leading ``nrhs`` axis; omitted ones fall back to a
+        ``jax.vmap`` of the unbatched op (correct, but without the
+        gauge-traffic amortization a truly batched kernel gives).
+        """
 
         def wrap_hop(fn):
             def wrapped(psi):
@@ -142,7 +207,13 @@ class WilsonOps:
             domain=domain, to_domain=to_domain, from_domain=from_domain,
             hop_oe_native=hop_oe, hop_eo_native=hop_eo,
             apply_dhat_native=apply_dhat,
-            apply_dhat_dagger_native=apply_dhat_dagger)
+            apply_dhat_dagger_native=apply_dhat_dagger,
+            to_domain_batched=to_domain_batched,
+            from_domain_batched=from_domain_batched,
+            hop_oe_native_batched=hop_oe_batched,
+            hop_eo_native_batched=hop_eo_batched,
+            apply_dhat_native_batched=apply_dhat_batched,
+            apply_dhat_dagger_native_batched=apply_dhat_dagger_batched)
 
 
 # name -> factory(U_e, U_o, **opts) -> WilsonOps

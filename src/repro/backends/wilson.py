@@ -70,8 +70,8 @@ def make_jnp_backend(U_e, U_o, **_unused) -> WilsonOps:
 
 def _make_pallas(U_e, U_o, *, fused: Optional[bool],
                  interpret: Optional[bool] = None,
-                 name: str) -> WilsonOps:
-    u_e_p, u_o_p = ops.make_planar_fields(U_e, U_o)
+                 name: str, dtype=jnp.float32) -> WilsonOps:
+    u_e_p, u_o_p = ops.make_planar_fields(U_e, U_o, dtype=dtype)
 
     def to_domain(psi):
         return layout.spinor_to_planar(psi, dtype=u_e_p.dtype)
@@ -91,35 +91,49 @@ def _make_pallas(U_e, U_o, *, fused: Optional[bool],
         return ops.apply_dhat_planar_any(u_e_p, u_o_p, v, kappa,
                                          fused=fused, interpret=interpret)
 
+    dagger = _dagger_via_gamma5_planar(apply_dhat)
+    # The planar kernels (and the layout codecs) are batch-polymorphic:
+    # a leading nrhs axis runs ONE kernel with each gauge plane loaded
+    # once per grid step, so the batched ops ARE the unbatched ops.
     return WilsonOps.from_native(
         name, domain="planar",
         to_domain=to_domain, from_domain=from_domain,
         hop_oe=hop_oe, hop_eo=hop_eo, apply_dhat=apply_dhat,
-        apply_dhat_dagger=_dagger_via_gamma5_planar(apply_dhat))
+        apply_dhat_dagger=dagger,
+        to_domain_batched=to_domain, from_domain_batched=from_domain,
+        hop_oe_batched=hop_oe, hop_eo_batched=hop_eo,
+        apply_dhat_batched=apply_dhat, apply_dhat_dagger_batched=dagger)
 
 
-def make_pallas_backend(U_e, U_o, *, interpret=None, **_unused) -> WilsonOps:
-    """Planar Pallas stencil, one ``pallas_call`` per hopping block."""
+def make_pallas_backend(U_e, U_o, *, interpret=None, dtype=jnp.float32,
+                        **_unused) -> WilsonOps:
+    """Planar Pallas stencil, one ``pallas_call`` per hopping block.
+
+    ``dtype`` sets the planar compute dtype (f32 default; bf16 for the
+    mixed-precision inner solve).
+    """
     return _make_pallas(U_e, U_o, fused=False, interpret=interpret,
-                        name="pallas")
+                        name="pallas", dtype=dtype)
 
 
 def make_pallas_fused_backend(U_e, U_o, *, interpret=None,
-                              **_unused) -> WilsonOps:
+                              dtype=jnp.float32, **_unused) -> WilsonOps:
     """Dhat as a single fused kernel; intermediate never touches HBM.
 
     Falls back to the two-kernel path automatically when the lattice's
-    VMEM-resident intermediate exceeds the scratch budget
-    (``fused=None`` auto-select in :func:`repro.kernels.ops.apply_dhat_planar_any`).
+    VMEM-resident intermediate — sized by the actual compute ``dtype``
+    and the RHS batch — exceeds the scratch budget (``fused=None``
+    auto-select in :func:`repro.kernels.ops.apply_dhat_planar_any`).
     """
     return _make_pallas(U_e, U_o, fused=None, interpret=interpret,
-                        name="pallas_fused")
+                        name="pallas_fused", dtype=dtype)
 
 
 def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
                              local_backend: str = "jnp_planar",
                              overlap: str = "fused",
                              interpret: Optional[bool] = None,
+                             dtype=jnp.float32,
                              **_unused) -> WilsonOps:
     """shard_map'd operator over a device mesh.
 
@@ -148,39 +162,68 @@ def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
             mesh, backend=local_backend, overlap=overlap,
             interpret=interpret)
 
-    u_e_p, u_o_p = ops.make_planar_fields(U_e, U_o)
+    u_e_p, u_o_p = ops.make_planar_fields(U_e, U_o, dtype=dtype)
     u_e_p = jax.device_put(u_e_p, partition.gauge_sharding())
     u_o_p = jax.device_put(u_o_p, partition.gauge_sharding())
     sp_shard = partition.spinor_sharding()
+    bsp_shard = partition.batched_spinor_sharding()
 
-    hop_fns = {p: jax.jit(qcd.make_hop_fn(partition, p))
-               for p in (evenodd.EVEN, evenodd.ODD)}
+    hop_fns = {(p, b): jax.jit(qcd.make_hop_fn(partition, p, batched=b))
+               for p in (evenodd.EVEN, evenodd.ODD)
+               for b in (False, True)}
     dhat_cache = {}
 
     def to_domain(psi):
-        return jax.device_put(layout.spinor_to_planar(psi), sp_shard)
+        return jax.device_put(
+            layout.spinor_to_planar(psi, dtype=u_e_p.dtype), sp_shard)
 
     def from_domain(v):
         return layout.spinor_from_planar(v)
 
+    def to_domain_batched(psi):
+        # One placement for the whole RHS block.
+        return jax.device_put(
+            layout.spinor_to_planar(psi, dtype=u_e_p.dtype), bsp_shard)
+
     def hop_oe(v):
         # H_oe reads even-parity gauge links as u_in, writes odd sites.
-        return hop_fns[evenodd.ODD](u_o_p, u_e_p, v)
+        return hop_fns[evenodd.ODD, False](u_o_p, u_e_p, v)
 
     def hop_eo(v):
-        return hop_fns[evenodd.EVEN](u_e_p, u_o_p, v)
+        return hop_fns[evenodd.EVEN, False](u_e_p, u_o_p, v)
+
+    def hop_oe_batched(v):
+        return hop_fns[evenodd.ODD, True](u_o_p, u_e_p, v)
+
+    def hop_eo_batched(v):
+        return hop_fns[evenodd.EVEN, True](u_e_p, u_o_p, v)
+
+    def _dhat(v, kappa, batched):
+        k = (float(kappa), batched)
+        if k not in dhat_cache:
+            dhat_cache[k] = jax.jit(
+                qcd.make_dhat_fn(partition, k[0], batched=batched))
+        return dhat_cache[k](u_e_p, u_o_p, v)
 
     def apply_dhat(v, kappa):
-        k = float(kappa)
-        if k not in dhat_cache:
-            dhat_cache[k] = jax.jit(qcd.make_dhat_fn(partition, k))
-        return dhat_cache[k](u_e_p, u_o_p, v)
+        return _dhat(v, kappa, False)
+
+    def apply_dhat_batched(v, kappa):
+        # The batched operator's halo exchange moves the whole RHS block
+        # in one ppermute per face — not nrhs exchanges.
+        return _dhat(v, kappa, True)
 
     return WilsonOps.from_native(
         "distributed", domain="planar_sharded",
         to_domain=to_domain, from_domain=from_domain,
         hop_oe=hop_oe, hop_eo=hop_eo, apply_dhat=apply_dhat,
-        apply_dhat_dagger=_dagger_via_gamma5_planar(apply_dhat))
+        apply_dhat_dagger=_dagger_via_gamma5_planar(apply_dhat),
+        to_domain_batched=to_domain_batched,
+        from_domain_batched=from_domain,
+        hop_oe_batched=hop_oe_batched, hop_eo_batched=hop_eo_batched,
+        apply_dhat_batched=apply_dhat_batched,
+        apply_dhat_dagger_batched=_dagger_via_gamma5_planar(
+            apply_dhat_batched))
 
 
 register_backend("jnp", make_jnp_backend)

@@ -5,11 +5,27 @@ All solvers are matrix-free (take a linear-operator callable), run under
 arrays as vectors.  CGNR (CG on the normal equations) is the robust
 workhorse for the non-Hermitian ``Dhat``; BiCGStab is the faster
 alternative the paper's solver stack (QWS) uses in practice.
+
+Two production features beyond the single-RHS f32 path:
+
+* **Multi-RHS batching** — ``cg_batched`` / ``cgnr_batched`` /
+  ``bicgstab_batched`` iterate a whole block of right-hand sides (leading
+  ``nrhs`` axis) through ONE batched operator application per iteration,
+  with *per-column* Krylov scalars and a per-column convergence mask:
+  converged columns freeze (their updates are zeroed) while the loop runs
+  until every column converged or ``max_iters``.
+* **Mixed-precision iterative refinement** — ``solve_wilson_eo(...,
+  inner_dtype="f32")`` runs the Krylov iteration in a cheap inner dtype
+  (f32 default, bf16 optional) and wraps it in an f64 outer loop: true
+  residual recomputed in f64, correction solved in the inner dtype,
+  repeat until the *f64* tolerance is met.  The expensive f64 operator is
+  applied once per outer pass instead of twice per Krylov iteration —
+  the QWS / Kanamori-Matsufuru single-precision-inner strategy.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,11 +48,71 @@ def _norm2(x):
     return _vdot(x, x).real
 
 
+# --- per-column (batched) vector algebra; leading axis = RHS index ------
+
+def _bvdot(a, b):
+    """Per-column ``<a, b>``: reduces every axis but the leading one."""
+    leaves_a, leaves_b = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    out = None
+    for x, y in zip(leaves_a, leaves_b):
+        s = jnp.sum((jnp.conj(x) * y).reshape(x.shape[0], -1), axis=1)
+        out = s if out is None else out + s
+    return out
+
+
+def _bnorm2(x):
+    return _bvdot(x, x).real
+
+
+def _bb(alpha, leaf):
+    """Broadcast a per-column scalar ``(nrhs,)`` against a leaf."""
+    return alpha.reshape(alpha.shape + (1,) * (leaf.ndim - 1))
+
+
+def _baxpy(alpha, x, y):
+    """``y + alpha * x`` with a per-column ``alpha``."""
+    return jax.tree_util.tree_map(
+        lambda xi, yi: _bb(alpha, xi) * xi + yi, x, y)
+
+
+def _tiny(dtype):
+    """Breakdown threshold: far below any meaningful Krylov scalar but
+    above the denormal underflow that poisons the division chain."""
+    real = jnp.finfo(jnp.zeros((), dtype).real.dtype)
+    return real.tiny ** 0.5
+
+
+def _nz(d, tiny):
+    """Guard a denominator: the quotient is only *consumed* where
+    ``|d| > tiny``, but a 0/0 in a dead lane would still produce a NaN
+    that survives the masking multiply (``NaN * 0 = NaN``) — replace
+    dead-lane denominators with 1 so every division is finite."""
+    return jnp.where(jnp.abs(d) > tiny, d, jnp.ones_like(d))
+
+
 class SolveResult(NamedTuple):
     x: jax.Array
     iterations: jnp.ndarray
     residual: jnp.ndarray      # relative residual |r| / |b|
     converged: jnp.ndarray
+
+
+class RefinedResult(NamedTuple):
+    """Result of a mixed-precision (iterative-refinement) solve.
+
+    First four fields match :class:`SolveResult` so existing callers
+    duck-type; the extras quantify the precision split: ``f64_applies``
+    counts applications of the f64 operator (the pure-f64 solve pays
+    ~2 per Krylov iteration; refinement pays 1 per outer pass), and
+    ``inner_iterations`` the total inner-dtype Krylov iterations.
+    """
+    x: jax.Array
+    iterations: jnp.ndarray
+    residual: jnp.ndarray
+    converged: jnp.ndarray
+    outer_iterations: int
+    f64_applies: int
+    inner_iterations: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +122,12 @@ class SolverConfig:
     # Check-pointed restart support: residual recomputed from scratch
     # every ``recompute_every`` iterations to bound drift (0 = never).
     recompute_every: int = 0
+    # Mixed-precision iterative refinement (None = single-precision
+    # solve as before).  "f32" or "bf16"; requires jax x64 for the
+    # outer residual.
+    inner_dtype: Optional[str] = None
+    inner_tol: float = 1e-4     # per-pass reduction target of the inner solve
+    max_outer: int = 25
 
 
 def cg(op: Callable, b, x0=None, *, tol: float = 1e-6, max_iters: int = 1000,
@@ -62,16 +144,22 @@ def cg(op: Callable, b, x0=None, *, tol: float = 1e-6, max_iters: int = 1000,
     p = r
     rr = _norm2(r)
     b2 = _norm2(b)
+    tiny = _tiny(rr.dtype)
     tol2 = (tol * tol) * b2
 
     def cond(state):
-        _, _, _, rr, k = state
-        return jnp.logical_and(rr > tol2, k < max_iters)
+        _, _, _, rr, good, k = state
+        return jnp.logical_and(
+            jnp.logical_and(rr > tol2, k < max_iters), good)
 
     def body(state):
-        x, r, p, rr, k = state
+        x, r, p, rr, good, k = state
         ap = op(p)
-        alpha = rr / _vdot(p, ap).real
+        pap = _vdot(p, ap).real
+        # Breakdown guard: pap ~ 0 (numerically nullspace direction)
+        # would scale the update by garbage — freeze and exit instead.
+        ok = pap > tiny
+        alpha = jnp.where(ok, rr / _nz(pap, tiny), 0.0)
         x = _axpy(alpha, p, x)
         r = _axpy(-alpha, ap, r)
         if recompute_every:
@@ -82,11 +170,69 @@ def cg(op: Callable, b, x0=None, *, tol: float = 1e-6, max_iters: int = 1000,
         rr_new = _norm2(r)
         beta = rr_new / rr
         p = _axpy(beta, p, r)
-        return x, r, p, rr_new, k + 1
+        return x, r, p, rr_new, ok, k + 1
 
-    x, r, p, rr, k = jax.lax.while_loop(cond, body, (x, r, p, rr, jnp.int32(0)))
+    state = (x, r, p, rr, jnp.bool_(True), jnp.int32(0))
+    x, r, p, rr, good, k = jax.lax.while_loop(cond, body, state)
     rel = jnp.sqrt(rr / jnp.maximum(b2, 1e-30))
     return SolveResult(x, k, rel, rel <= tol)
+
+
+def cg_batched(op: Callable, b, x0=None, *, tol: float = 1e-6,
+               max_iters: int = 1000,
+               recompute_every: int = 0) -> SolveResult:
+    """Batched CG: one operator application per iteration for the whole
+    RHS block, per-column scalars, per-column convergence freezing.
+
+    A column whose residual reaches tolerance has its updates zeroed
+    (``alpha = beta = 0``) from then on — its ``x``/``r`` are frozen
+    bit-exactly while the remaining columns keep iterating.  Returns
+    per-column ``iterations`` / ``residual`` / ``converged``.
+    """
+    x = x0 if x0 is not None else _scale(0.0, b)
+    r = b if x0 is None else _axpy(-1.0, op(x), b)
+    p = r
+    rr = _bnorm2(r)
+    b2 = _bnorm2(b)
+    tiny = _tiny(rr.dtype)
+    tol2 = (tol * tol) * b2
+    active = rr > tol2
+    iters = jnp.zeros(rr.shape, jnp.int32)
+
+    def cond(state):
+        *_, active, _, k = state
+        return jnp.logical_and(jnp.any(active), k < max_iters)
+
+    def body(state):
+        x, r, p, rr, active, iters, k = state
+        ap = op(p)
+        pap = _bvdot(p, ap).real
+        # Breakdown guard: a (numerically) nullspace search direction
+        # gives pap ~ 0 — freeze that column instead of scaling by a
+        # garbage alpha (mirrors the bicgstab guards).
+        ok = jnp.logical_and(active, pap > tiny)
+        af = ok.astype(rr.dtype)
+        alpha = af * rr / _nz(pap, tiny)
+        x = _baxpy(alpha, p, x)
+        r = _baxpy(-alpha, ap, r)
+        if recompute_every:
+            r = jax.lax.cond(
+                (k + 1) % recompute_every == 0,
+                lambda xk: _axpy(-1.0, op(xk), b),
+                lambda _: r, x)
+        rr_new = _bnorm2(r)
+        beta = af * rr_new / _nz(rr, tiny)
+        p = _baxpy(beta, p, r)
+        active_new = jnp.logical_and(ok, rr_new > tol2)
+        leaving = jnp.logical_and(active, jnp.logical_not(active_new))
+        iters = jnp.where(leaving, k + 1, iters)
+        return x, r, p, rr_new, active_new, iters, k + 1
+
+    state = (x, r, p, rr, active, iters, jnp.int32(0))
+    x, r, p, rr, active, iters, k = jax.lax.while_loop(cond, body, state)
+    iters = jnp.where(active, k, iters)      # unconverged: ran to the end
+    rel = jnp.sqrt(rr / jnp.maximum(b2, 1e-30))
+    return SolveResult(x, iters, rel, rel <= tol)
 
 
 def cgnr(op: Callable, op_dag: Callable, b, x0=None, *,
@@ -106,6 +252,22 @@ def cgnr(op: Callable, op_dag: Callable, b, x0=None, *,
     return SolveResult(res.x, res.iterations, rel, rel <= tol * 10)
 
 
+def cgnr_batched(op: Callable, op_dag: Callable, b, x0=None, *,
+                 tol: float = 1e-6, max_iters: int = 1000,
+                 recompute_every: int = 0) -> SolveResult:
+    """Batched CGNR; per-column true residuals of the original system."""
+    bn = op_dag(b)
+
+    def normal(v):
+        return op_dag(op(v))
+
+    res = cg_batched(normal, bn, x0, tol=tol, max_iters=max_iters,
+                     recompute_every=recompute_every)
+    r = _axpy(-1.0, op(res.x), b)
+    rel = jnp.sqrt(_bnorm2(r) / jnp.maximum(_bnorm2(b), 1e-30))
+    return SolveResult(res.x, res.iterations, rel, rel <= tol * 10)
+
+
 def bicgstab(op: Callable, b, x0=None, *, tol: float = 1e-6,
              max_iters: int = 1000, recompute_every: int = 0) -> SolveResult:
     """BiCGStab for general (non-Hermitian) ``op``.
@@ -115,59 +277,178 @@ def bicgstab(op: Callable, b, x0=None, *, tol: float = 1e-6,
     vectors, where the operator is the real representation of ``Dhat``).
     ``recompute_every`` as in :func:`cg` (reliable-updates style
     true-residual replacement).
+
+    Breakdown guards: BiCGStab's recurrence divides by ``rho``,
+    ``<r0, v>`` and ``<t, t>`` (via ``omega``); any of them underflowing
+    would turn the whole state into NaN inside the ``while_loop``.  Each
+    is checked against a tiny threshold — on breakdown the update scalars
+    are zeroed (state freezes at the last good iterate), the loop exits,
+    and the result honestly reports the frozen residual with
+    ``converged=False`` instead of NaN.
     """
     x = x0 if x0 is not None else _scale(0.0, b)
     r = _axpy(-1.0, op(x), b)
     r0 = r
     one = jnp.ones((), dtype=_vdot(b, b).dtype)
+    tiny = _tiny(one.dtype)
     rho = alpha = omega = one
     v = p = _scale(0.0, b)
     b2 = _norm2(b)
     tol2 = (tol * tol) * b2
 
     def cond(state):
-        _, r, *_, k = state
-        return jnp.logical_and(_norm2(r) > tol2, k < max_iters)
+        _, r, *_, good, k = state
+        return jnp.logical_and(
+            jnp.logical_and(_norm2(r) > tol2, k < max_iters), good)
 
     def body(state):
-        x, r, p, v, rho, alpha, omega, k = state
+        x, r, p, v, rho, alpha, omega, good, k = state
         rho_new = _vdot(r0, r)
-        beta = (rho_new / rho) * (alpha / omega)
+        ok = jnp.logical_and(jnp.abs(rho_new) > tiny,
+                             jnp.logical_and(jnp.abs(rho) > tiny,
+                                             jnp.abs(omega) > tiny))
+        okc = ok.astype(rho_new.dtype)
+        beta = okc * (rho_new / _nz(rho, tiny)) * (alpha / _nz(omega, tiny))
         p = _axpy(beta, _axpy(-omega, v, p), r)
         v = op(p)
-        alpha = rho_new / _vdot(r0, v)
-        s = _axpy(-alpha, v, r)
+        r0v = _vdot(r0, v)
+        ok = jnp.logical_and(ok, jnp.abs(r0v) > tiny)
+        okc = ok.astype(rho_new.dtype)
+        alpha_new = okc * rho_new / _nz(r0v, tiny)
+        s = _axpy(-alpha_new, v, r)
         t = op(s)
-        omega = _vdot(t, s) / _vdot(t, t)
-        x = _axpy(alpha, p, _axpy(omega, s, x))
-        r = _axpy(-omega, t, s)
+        tt = _vdot(t, t).real
+        ok = jnp.logical_and(ok, tt > tiny)
+        okc = ok.astype(rho_new.dtype)
+        omega_new = okc * _vdot(t, s) / _nz(tt, tiny).astype(rho_new.dtype)
+        x = _axpy(alpha_new, p, _axpy(omega_new, s, x))
+        r = _axpy(-omega_new, t, s)
         if recompute_every:
             r = jax.lax.cond(
                 (k + 1) % recompute_every == 0,
                 lambda xk: _axpy(-1.0, op(xk), b),
                 lambda _: r, x)
-        return x, r, p, v, rho_new, alpha, omega, k + 1
+        return x, r, p, v, rho_new, alpha_new, omega_new, ok, k + 1
 
-    state = (x, r, p, v, rho, alpha, omega, jnp.int32(0))
+    state = (x, r, p, v, rho, alpha, omega, jnp.bool_(True), jnp.int32(0))
     x, r, *_, k = jax.lax.while_loop(cond, body, state)
     rel = jnp.sqrt(_norm2(r) / jnp.maximum(b2, 1e-30))
     return SolveResult(x, k, rel, rel <= tol)
 
 
+def bicgstab_batched(op: Callable, b, x0=None, *, tol: float = 1e-6,
+                     max_iters: int = 1000,
+                     recompute_every: int = 0) -> SolveResult:
+    """Batched BiCGStab with per-column convergence AND breakdown masks.
+
+    Converged columns freeze (scalars zeroed, iterate kept bit-exact);
+    broken-down columns freeze the same way but stay unconverged —
+    ``converged[j] = False`` for them instead of a NaN-poisoned batch.
+    """
+    x = x0 if x0 is not None else _scale(0.0, b)
+    r = b if x0 is None else _axpy(-1.0, op(x), b)
+    r0 = r
+    sdtype = _bvdot(b, b).dtype
+    tiny = _tiny(sdtype)
+    n = jax.tree_util.tree_leaves(b)[0].shape[0]
+    one = jnp.ones((n,), dtype=sdtype)
+    rho = alpha = omega = one
+    v = p = _scale(0.0, b)
+    b2 = _bnorm2(b)
+    tol2 = (tol * tol) * b2
+    active = _bnorm2(r) > tol2
+    iters = jnp.zeros((n,), jnp.int32)
+
+    def cond(state):
+        *_, active, _, k = state
+        return jnp.logical_and(jnp.any(active), k < max_iters)
+
+    def body(state):
+        x, r, p, v, rho, alpha, omega, active, iters, k = state
+        rho_new = _bvdot(r0, r)
+        ok = jnp.logical_and(
+            active,
+            jnp.logical_and(jnp.abs(rho_new) > tiny,
+                            jnp.logical_and(jnp.abs(rho) > tiny,
+                                            jnp.abs(omega) > tiny)))
+        okc = ok.astype(sdtype)
+        beta = okc * (rho_new / _nz(rho, tiny)) * (alpha / _nz(omega, tiny))
+        # Frozen columns get beta = 0 -> p := r (harmless: their alpha /
+        # omega below are 0, so x and r never move again).
+        p = _baxpy(beta, _baxpy(-omega * okc, v, p), r)
+        v = op(p)
+        r0v = _bvdot(r0, v)
+        ok = jnp.logical_and(ok, jnp.abs(r0v) > tiny)
+        okc = ok.astype(sdtype)
+        alpha_new = okc * rho_new / _nz(r0v, tiny)
+        s = _baxpy(-alpha_new, v, r)
+        t = op(s)
+        tt = _bvdot(t, t).real
+        ok = jnp.logical_and(ok, tt > tiny)
+        okc = ok.astype(sdtype)
+        omega_new = okc * _bvdot(t, s) / _nz(tt, tiny).astype(sdtype)
+        x = _baxpy(alpha_new, p, _baxpy(omega_new, s, x))
+        r = _baxpy(-omega_new, t, s)
+        if recompute_every:
+            r = jax.lax.cond(
+                (k + 1) % recompute_every == 0,
+                lambda xk: _axpy(-1.0, op(xk), b),
+                lambda _: r, x)
+        rr = _bnorm2(r)
+        # Columns that broke down this iteration (ok went False while
+        # still active and unconverged) freeze too: drop them from the
+        # active set so the loop can terminate for the rest.  Either way
+        # of leaving the active set records the iteration it happened at.
+        active_new = jnp.logical_and(ok, rr > tol2)
+        leaving = jnp.logical_and(active, jnp.logical_not(active_new))
+        iters = jnp.where(leaving, k + 1, iters)
+        return (x, r, p, v, rho_new, alpha_new, omega_new, active_new,
+                iters, k + 1)
+
+    state = (x, r, p, v, rho, alpha, omega, active, iters, jnp.int32(0))
+    x, r, *_, active, iters, k = jax.lax.while_loop(cond, body, state)
+    iters = jnp.where(active, k, iters)
+    rel = jnp.sqrt(_bnorm2(r) / jnp.maximum(b2, 1e-30))
+    return SolveResult(x, iters, rel, rel <= tol)
+
+
 def _run_krylov(method: str, dhat, dhat_dag, rhs, *, tol, max_iters,
-                recompute_every):
+                recompute_every, batched: bool = False):
     if method == "cgnr":
-        return cgnr(dhat, dhat_dag, rhs, tol=tol, max_iters=max_iters,
-                    recompute_every=recompute_every)
+        fn = cgnr_batched if batched else cgnr
+        return fn(dhat, dhat_dag, rhs, tol=tol, max_iters=max_iters,
+                  recompute_every=recompute_every)
     if method == "bicgstab":
-        return bicgstab(dhat, rhs, tol=tol, max_iters=max_iters,
-                        recompute_every=recompute_every)
+        fn = bicgstab_batched if batched else bicgstab
+        return fn(dhat, rhs, tol=tol, max_iters=max_iters,
+                  recompute_every=recompute_every)
     raise ValueError(f"unknown method {method!r}")
+
+
+_INNER_DTYPES = {
+    "f32": jnp.float32, "float32": jnp.float32,
+    "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+}
+
+
+def resolve_inner_dtype(inner_dtype):
+    """Map an inner-dtype spelling (``"f32"``/``"bf16"``/...) or dtype to
+    the jnp dtype; the single source of truth the CLI reuses too."""
+    if isinstance(inner_dtype, str):
+        try:
+            return _INNER_DTYPES[inner_dtype.lower()]
+        except KeyError:
+            raise ValueError(
+                f"unknown inner_dtype {inner_dtype!r}; "
+                f"choose from {sorted(set(_INNER_DTYPES))}") from None
+    return jnp.dtype(inner_dtype).type
 
 
 def solve_wilson_eo(U_e, U_o, eta_e, eta_o, kappa, *, method: str = "cgnr",
                     tol: float = 1e-6, max_iters: int = 2000,
                     recompute_every: int = 0, config: SolverConfig = None,
+                    inner_dtype=None, inner_tol: float = 1e-4,
+                    max_outer: int = 25,
                     apply_dhat_fn=None, apply_dhat_dag_fn=None,
                     hop_oe_fn=None, hop_eo_fn=None,
                     backend=None, backend_opts=None):
@@ -193,9 +474,23 @@ def solve_wilson_eo(U_e, U_o, eta_e, eta_o, kappa, *, method: str = "cgnr",
     keep the old complex-interface hand-wiring (and its per-call
     conversion cost) available.
 
+    **Multi-RHS:** sources with a leading batch axis —
+    ``eta_* : (nrhs, T, Z, Y, Xh, 4, 3)`` — run the batched pipeline:
+    one batched encode, batched native operators (the Pallas kernels
+    load each gauge plane once per grid step for the whole block; the
+    distributed operator does one batched halo exchange), and a batched
+    Krylov solve whose converged columns freeze individually.  The
+    returned :class:`SolveResult` fields are then per-column arrays.
+
+    **Mixed precision:** ``inner_dtype`` (``"f32"``/``"bf16"``, or via
+    ``config``) switches to iterative refinement — inner Krylov solves
+    in that dtype, outer f64 true-residual loop until the f64 ``tol`` is
+    met (requires jax x64).  Returns a :class:`RefinedResult`.
+
     ``config`` (a :class:`SolverConfig`) supplies ``tol`` / ``max_iters``
-    / ``recompute_every`` in one object; individual keywords are ignored
-    when it is given.
+    / ``recompute_every`` / ``inner_dtype`` / ``inner_tol`` /
+    ``max_outer`` in one object; individual keywords are ignored when it
+    is given.
     """
     from . import evenodd  # local import to avoid cycle
     from repro import backends as backends_lib  # avoid import cycle
@@ -203,6 +498,24 @@ def solve_wilson_eo(U_e, U_o, eta_e, eta_o, kappa, *, method: str = "cgnr",
     if config is not None:
         tol, max_iters = config.tol, config.max_iters
         recompute_every = config.recompute_every
+        inner_dtype = config.inner_dtype
+        inner_tol, max_outer = config.inner_tol, config.max_outer
+
+    batched = eta_e.ndim == 7
+
+    if inner_dtype is not None:
+        if (apply_dhat_fn or apply_dhat_dag_fn or hop_oe_fn or hop_eo_fn):
+            raise ValueError(
+                "inner_dtype (mixed-precision refinement) rebuilds the "
+                "Wilson operator from the gauge field and cannot honor "
+                "explicit *_fn operator overrides; pass a backend "
+                "name/WilsonOps instead")
+        return _solve_wilson_eo_refined(
+            U_e, U_o, eta_e, eta_o, kappa, method=method, tol=tol,
+            max_iters=max_iters, recompute_every=recompute_every,
+            inner_dtype=inner_dtype, inner_tol=inner_tol,
+            max_outer=max_outer, batched=batched,
+            backend=backend, backend_opts=backend_opts)
 
     explicit = (apply_dhat_fn or apply_dhat_dag_fn
                 or hop_oe_fn or hop_eo_fn)
@@ -238,19 +551,149 @@ def solve_wilson_eo(U_e, U_o, eta_e, eta_o, kappa, *, method: str = "cgnr",
             apply_dhat=lambda v, _k: dhat(v),
             apply_dhat_dagger=lambda v, _k: dhat_dag(v))
 
+    if batched:
+        to_dom, from_dom = bops.to_domain_batched, bops.from_domain_batched
+        hop_eo_nat, hop_oe_nat = (bops.hop_eo_native_batched,
+                                  bops.hop_oe_native_batched)
+        dhat_nat = bops.apply_dhat_native_batched
+        dhat_dag_nat = bops.apply_dhat_dagger_native_batched
+    else:
+        to_dom, from_dom = bops.to_domain, bops.from_domain
+        hop_eo_nat, hop_oe_nat = bops.hop_eo_native, bops.hop_oe_native
+        dhat_nat = bops.apply_dhat_native
+        dhat_dag_nat = bops.apply_dhat_dagger_native
+
     # Encode once, iterate in the backend's native domain, decode once.
-    v_e, v_o = bops.to_domain(eta_e), bops.to_domain(eta_o)
+    v_e, v_o = to_dom(eta_e), to_dom(eta_o)
     # RHS of Eq. (4): eta_e + kappa * H_eo eta_o  (D_eo = -kappa H_eo).
-    rhs = _axpy(kappa, bops.hop_eo_native(v_o), v_e)
+    rhs = _axpy(kappa, hop_eo_nat(v_o), v_e)
     res = _run_krylov(
         method,
-        lambda v: bops.apply_dhat_native(v, kappa),
-        lambda v: bops.apply_dhat_dagger_native(v, kappa),
+        lambda v: dhat_nat(v, kappa),
+        lambda v: dhat_dag_nat(v, kappa),
         rhs, tol=tol, max_iters=max_iters,
-        recompute_every=recompute_every)
+        recompute_every=recompute_every, batched=batched)
     # Eq. (5): xi_o = eta_o + kappa * H_oe xi_e.
-    v_xi_o = _axpy(kappa, bops.hop_oe_native(res.x), v_o)
+    v_xi_o = _axpy(kappa, hop_oe_nat(res.x), v_o)
     # Decode keeps the callers' spinor dtype (complex128 under x64).
-    xi_e = bops.from_domain(res.x).astype(eta_e.dtype)
-    xi_o = bops.from_domain(v_xi_o).astype(eta_o.dtype)
+    xi_e = from_dom(res.x).astype(eta_e.dtype)
+    xi_o = from_dom(v_xi_o).astype(eta_o.dtype)
     return xi_e, xi_o, res._replace(x=xi_e)
+
+
+def _solve_wilson_eo_refined(U_e, U_o, eta_e, eta_o, kappa, *, method,
+                             tol, max_iters, recompute_every, inner_dtype,
+                             inner_tol, max_outer, batched,
+                             backend, backend_opts):
+    """Mixed-precision iterative refinement on the Schur system.
+
+    Outer loop (Python-level; a handful of passes): f64 true residual of
+    ``Dhat x = rhs``, then a correction solve ``Dhat e = r`` in the cheap
+    inner dtype through the chosen backend's native domain, ``x += e``,
+    until the **f64** relative residual meets ``tol``.  The f64 operator
+    (pure-XLA complex128 reference path) is applied exactly once per
+    outer pass — versus ~2 per Krylov iteration for a pure-f64 solve —
+    and all the bandwidth-hungry iterating happens at half (or quarter,
+    bf16) the f64 memory traffic.
+    """
+    from . import evenodd
+    from repro import backends as backends_lib
+
+    if jnp.zeros((), jnp.float64).dtype != jnp.dtype(jnp.float64):
+        raise ValueError(
+            "mixed-precision refinement needs float64 for the outer "
+            "residual: enable x64 (jax.config.update('jax_enable_x64', "
+            "True) or the jax.experimental.enable_x64 context)")
+
+    idt = resolve_inner_dtype(inner_dtype)
+
+    # f64 reference operator (pure XLA, complex128).
+    U64_e = U_e.astype(jnp.complex128)
+    U64_o = U_o.astype(jnp.complex128)
+
+    def _maybe_vmap(fn):
+        return jax.vmap(fn) if batched else fn
+
+    dhat64 = jax.jit(_maybe_vmap(
+        lambda v: evenodd.apply_dhat(U64_e, U64_o, v, kappa)))
+    hop_eo64 = jax.jit(_maybe_vmap(
+        lambda v: evenodd.hop_eo(U64_e, U64_o, v)))
+    hop_oe64 = jax.jit(_maybe_vmap(
+        lambda v: evenodd.hop_oe(U64_e, U64_o, v)))
+
+    # Inner backend at the inner dtype: planar backends re-planarize the
+    # gauge once at that dtype; the jnp backend has no planar dtype, so
+    # its gauge is downcast to complex64 here — otherwise a complex128
+    # gauge would promote every inner iteration back to f64 arithmetic
+    # and the refinement would save nothing.  (bf16 has no complex
+    # counterpart: through jnp the inner solve runs at f32.)
+    if backend is None:
+        backend = "jnp"
+    if isinstance(backend, backends_lib.WilsonOps):
+        bops = backend
+    else:
+        opts = dict(backend_opts or {})
+        if backend == "jnp":
+            bops = backends_lib.make_wilson_ops(
+                backend, U_e.astype(jnp.complex64),
+                U_o.astype(jnp.complex64), **opts)
+        else:
+            opts.setdefault("dtype", idt)
+            bops = backends_lib.make_wilson_ops(backend, U_e, U_o, **opts)
+
+    if batched:
+        to_dom, from_dom = bops.to_domain_batched, bops.from_domain_batched
+        dhat_nat = bops.apply_dhat_native_batched
+        dhat_dag_nat = bops.apply_dhat_dagger_native_batched
+    else:
+        to_dom, from_dom = bops.to_domain, bops.from_domain
+        dhat_nat = bops.apply_dhat_native
+        dhat_dag_nat = bops.apply_dhat_dagger_native
+
+    eta64_e = eta_e.astype(jnp.complex128)
+    eta64_o = eta_o.astype(jnp.complex128)
+    rhs64 = eta64_e + kappa * hop_eo64(eta64_o)
+    f64_applies = 1  # the hop above
+    bnorm = _bnorm2 if batched else _norm2
+    b2 = bnorm(rhs64)
+
+    x64 = jnp.zeros_like(rhs64)
+    inner_iters = 0
+    # Per-column (batched) / scalar (unbatched) total inner iterations,
+    # matching the batched SolveResult contract RefinedResult duck-types.
+    iters_acc = jnp.zeros(b2.shape, jnp.int32)
+    outer = 0
+    rel = None
+    for outer in range(1, max_outer + 1):
+        r64 = rhs64 - dhat64(x64)
+        f64_applies += 1
+        rel = jnp.sqrt(bnorm(r64) / jnp.maximum(b2, 1e-300))
+        if bool(jnp.all(rel <= tol)):
+            break
+        # Correction solve in the inner dtype, native domain.
+        v = to_dom(r64.astype(jnp.complex64))
+        res = _run_krylov(
+            method,
+            lambda w: dhat_nat(w, kappa),
+            lambda w: dhat_dag_nat(w, kappa),
+            v, tol=inner_tol, max_iters=max_iters,
+            recompute_every=recompute_every, batched=batched)
+        x64 = x64 + from_dom(res.x).astype(jnp.complex128)
+        iters_acc = iters_acc + res.iterations.astype(jnp.int32)
+        inner_iters += int(jnp.max(res.iterations))
+    else:
+        # Outer budget exhausted: report the residual of the final
+        # iterate, not the one from before the last correction.
+        r64 = rhs64 - dhat64(x64)
+        f64_applies += 1
+        rel = jnp.sqrt(bnorm(r64) / jnp.maximum(b2, 1e-300))
+    converged = rel <= tol
+
+    xi_o64 = eta64_o + kappa * hop_oe64(x64)
+    f64_applies += 1
+    xi_e = x64.astype(eta_e.dtype)
+    xi_o = xi_o64.astype(eta_o.dtype)
+    return xi_e, xi_o, RefinedResult(
+        x=xi_e, iterations=iters_acc, residual=rel, converged=converged,
+        outer_iterations=outer, f64_applies=f64_applies,
+        inner_iterations=inner_iters)

@@ -68,11 +68,20 @@ class QCDPartition:
         return P(self.t_axes, self.z_axes, None, None, None)
 
     @property
+    def batched_spinor_spec(self) -> P:
+        """Spec for a multi-RHS planar block ``(nrhs, T, Z, 24, Y, Xh)``:
+        the RHS axis is replicated, the lattice sharding is unchanged."""
+        return P(None, self.t_axes, self.z_axes, None, None, None)
+
+    @property
     def gauge_spec(self) -> P:
         return P(None, self.t_axes, self.z_axes, None, None, None)
 
     def spinor_sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, self.spinor_spec)
+
+    def batched_spinor_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self.batched_spinor_spec)
 
     def gauge_sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, self.gauge_spec)
@@ -80,10 +89,18 @@ class QCDPartition:
 
 def _local_hop(part: QCDPartition, u_out, u_in, src, out_parity,
                u_in_pre_extended: bool = False):
-    """One hopping block on this rank's block (inside shard_map)."""
-    Tl, Zl = src.shape[0], src.shape[1]
+    """One hopping block on this rank's block (inside shard_map).
+
+    ``src`` may carry a leading multi-RHS axis ``(nrhs, Tl, Zl, 24, Y,
+    Xh)``: the halo exchange then moves the whole batched face in ONE
+    ``ppermute`` per direction (instead of nrhs exchanges) and the local
+    stencil runs the batched kernel.
+    """
+    batched = src.ndim == 6
+    lead = 1 if batched else 0
+    Tl, Zl = src.shape[lead], src.shape[lead + 1]
     t0, z0 = halo.local_origin(part.t_axes, part.z_axes, Tl, Zl)
-    src_ext = halo.extend_tz(src, part.t_axes, part.z_axes, 0, 1)
+    src_ext = halo.extend_tz(src, part.t_axes, part.z_axes, lead, lead + 1)
     u_in_ext = (u_in if u_in_pre_extended else
                 halo.extend_tz(u_in, part.t_axes, part.z_axes, 1, 2))
 
@@ -95,8 +112,19 @@ def _local_hop(part: QCDPartition, u_out, u_in, src, out_parity,
         if part.backend == "jnp_planar":
             return hop_block_ext_planar_native(u_out, u_in_ext, src_ext,
                                                out_parity, (t0 + z0) % 2)
+        if batched:
+            # complex-roundtrip local stencil isn't batch-polymorphic;
+            # vmap it (the halo exchange above already ran once for the
+            # whole block, outside the vmap)
+            return jax.vmap(lambda s: kref.hop_block_ext_planar(
+                u_out, u_in_ext, s, out_parity, (t0 + z0) % 2))(src_ext)
         return kref.hop_block_ext_planar(u_out, u_in_ext, src_ext,
                                          out_parity, (t0 + z0) % 2)
+
+    if batched:
+        raise ValueError("multi-RHS batching requires overlap='fused' "
+                         "(the split boundary-recompute path is "
+                         "single-RHS only)")
 
     # --- split: bulk with periodic wrap (no halo dependency) ------------
     if part.backend == "pallas":
@@ -137,27 +165,37 @@ def _local_hop(part: QCDPartition, u_out, u_in, src, out_parity,
     return out
 
 
-def make_hop_fn(part: QCDPartition, out_parity: int):
-    """Global (sharded-array) hopping block as a pjit-able function."""
+def make_hop_fn(part: QCDPartition, out_parity: int, *,
+                batched: bool = False):
+    """Global (sharded-array) hopping block as a pjit-able function.
+
+    ``batched=True`` builds the multi-RHS variant: spinor arguments carry
+    a leading ``nrhs`` axis (replicated over the mesh) and each hop does
+    ONE batched halo exchange for the whole block.
+    """
+    sspec = part.batched_spinor_spec if batched else part.spinor_spec
 
     def local_fn(u_out, u_in, src):
         return _local_hop(part, u_out, u_in, src, out_parity)
 
     return shard_map(
         local_fn, mesh=part.mesh,
-        in_specs=(part.gauge_spec, part.gauge_spec, part.spinor_spec),
-        out_specs=part.spinor_spec, check_vma=False)
+        in_specs=(part.gauge_spec, part.gauge_spec, sspec),
+        out_specs=sspec, check_vma=False)
 
 
-def make_dhat_fn(part: QCDPartition, kappa: float):
+def make_dhat_fn(part: QCDPartition, kappa: float, *,
+                 batched: bool = False):
     """Even-odd preconditioned operator on globally sharded planar arrays.
 
     Returns ``f(u_e_p, u_o_p, psi_e_p) -> (1 - kappa^2 H_eo H_oe) psi_e``.
     With ``part.hoist_gauge`` the gauge arguments must be pre-extended via
     :func:`make_gauge_extender` (halo'd once per solve, not per apply).
+    ``batched`` as in :func:`make_hop_fn`.
     """
     k2 = float(kappa) ** 2
     pre = part.hoist_gauge
+    sspec = part.batched_spinor_spec if batched else part.spinor_spec
 
     def local_fn(u_e, u_o, psi_e):
         tmp = _local_hop(part, u_o, u_e, psi_e, evenodd.ODD,
@@ -180,8 +218,8 @@ def make_dhat_fn(part: QCDPartition, kappa: float):
 
     return shard_map(
         local_fn, mesh=part.mesh,
-        in_specs=(part.gauge_spec, part.gauge_spec, part.spinor_spec),
-        out_specs=part.spinor_spec, check_vma=False)
+        in_specs=(part.gauge_spec, part.gauge_spec, sspec),
+        out_specs=sspec, check_vma=False)
 
 
 def make_gauge_extender(part: QCDPartition):
@@ -194,15 +232,17 @@ def make_gauge_extender(part: QCDPartition):
         out_specs=part.gauge_spec, check_vma=False)
 
 
-def make_dhat_dagger_fn(part: QCDPartition, kappa: float):
+def make_dhat_dagger_fn(part: QCDPartition, kappa: float, *,
+                        batched: bool = False):
     """``Dhat^dag`` on sharded planar arrays via gamma5-hermiticity.
 
     gamma5 in the planar layout flips the sign of spin components 2,3
-    (DeGrand-Rossi basis), i.e. planar components 12..23.
+    (DeGrand-Rossi basis), i.e. planar components 12..23 (batch-
+    polymorphic: it acts on the trailing ``(24, Y, Xh)`` dims).
     """
     from repro.kernels.layout import gamma5_planar
 
-    dhat = make_dhat_fn(part, kappa)
+    dhat = make_dhat_fn(part, kappa, batched=batched)
 
     def fn(u_e, u_o, psi_e):
         return gamma5_planar(dhat(u_e, u_o, gamma5_planar(psi_e)))

@@ -13,6 +13,12 @@ re/im component axis:
 
 This is the AoSoA layout of Eq. (6)/(7) with the SIMD vector grown to a
 whole VMEM-resident plane.
+
+Multi-RHS batching: the spinor conversions accept arbitrary *leading*
+batch dims, so a block of right-hand sides ``(nrhs, T, Z, Y, Xh, 4, 3)``
+maps to the batched planar layout ``(nrhs, T, Z, 24, Y, Xh)`` — the
+layout the batched kernels eat while loading each gauge plane once for
+the whole block.
 """
 from __future__ import annotations
 
@@ -22,19 +28,28 @@ SPINOR_COMPS = 24  # 4 spin x 3 color x re/im
 GAUGE_COMPS = 18   # 3 x 3 x re/im
 
 
+def _real_dtype_of(complex_dtype):
+    return (jnp.float64 if jnp.dtype(complex_dtype) == jnp.dtype(jnp.complex128)
+            else jnp.float32)
+
+
 def spinor_to_planar(psi: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
-    """``(T, Z, Y, Xh, 4, 3)`` complex -> ``(T, Z, 24, Y, Xh)`` real."""
-    T, Z, Y, Xh = psi.shape[:4]
-    arr = jnp.stack([psi.real, psi.imag], axis=-1)       # (T,Z,Y,Xh,4,3,2)
-    arr = arr.transpose(0, 1, 4, 5, 6, 2, 3)             # (T,Z,4,3,2,Y,Xh)
-    return arr.reshape(T, Z, SPINOR_COMPS, Y, Xh).astype(dtype)
+    """``(..., T, Z, Y, Xh, 4, 3)`` complex -> ``(..., T, Z, 24, Y, Xh)``.
+
+    Leading batch dims (the multi-RHS axis) pass through unchanged.
+    """
+    *batch, T, Z, Y, Xh = psi.shape[:-2]
+    arr = jnp.stack([psi.real, psi.imag], axis=-1)    # (...,T,Z,Y,Xh,4,3,2)
+    # (Y, Xh) to the trailing (sublane, lane) position.
+    arr = jnp.moveaxis(arr, (-5, -4), (-2, -1))       # (...,T,Z,4,3,2,Y,Xh)
+    return arr.reshape(*batch, T, Z, SPINOR_COMPS, Y, Xh).astype(dtype)
 
 
 def spinor_from_planar(p: jnp.ndarray, dtype=jnp.complex64) -> jnp.ndarray:
-    """Inverse of :func:`spinor_to_planar`."""
-    T, Z, _, Y, Xh = p.shape
-    arr = p.astype(jnp.float32).reshape(T, Z, 4, 3, 2, Y, Xh)
-    arr = arr.transpose(0, 1, 5, 6, 2, 3, 4)             # (T,Z,Y,Xh,4,3,2)
+    """Inverse of :func:`spinor_to_planar` (batch dims pass through)."""
+    *batch, T, Z, _, Y, Xh = p.shape
+    arr = p.astype(_real_dtype_of(dtype)).reshape(*batch, T, Z, 4, 3, 2, Y, Xh)
+    arr = jnp.moveaxis(arr, (-2, -1), (-5, -4))       # (...,T,Z,Y,Xh,4,3,2)
     return (arr[..., 0] + 1j * arr[..., 1]).astype(dtype)
 
 
@@ -61,6 +76,6 @@ def gauge_to_planar(u: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
 def gauge_from_planar(p: jnp.ndarray, dtype=jnp.complex64) -> jnp.ndarray:
     """Inverse of :func:`gauge_to_planar`."""
     _, T, Z, _, Y, Xh = p.shape
-    arr = p.astype(jnp.float32).reshape(4, T, Z, 3, 3, 2, Y, Xh)
+    arr = p.astype(_real_dtype_of(dtype)).reshape(4, T, Z, 3, 3, 2, Y, Xh)
     arr = arr.transpose(0, 1, 2, 6, 7, 3, 4, 5)          # (4,T,Z,Y,Xh,3,3,2)
     return (arr[..., 0] + 1j * arr[..., 1]).astype(dtype)

@@ -17,7 +17,9 @@ from .wilson_stencil import (dhat_planar_fused, fused_dhat_fits,
 def hop_block(u_out_p, u_in_p, src_p, *, out_parity: int,
               tz_offset: Tuple[int, int] = (0, 0), halo: bool = False,
               interpret: Optional[bool] = None):
-    """Planar hopping block (jit'd)."""
+    """Planar hopping block (jit'd; ``src_p`` may carry a leading RHS
+    batch axis — the gauge planes are loaded once per grid step either
+    way)."""
     return hop_block_planar(u_out_p, u_in_p, src_p, out_parity,
                             tz_offset=tz_offset, halo=halo,
                             interpret=interpret)
@@ -85,11 +87,13 @@ def apply_dhat_planar_any(u_e_p, u_o_p, src_p, kappa: float, *,
                           interpret: Optional[bool] = None):
     """Planar-in/planar-out Dhat — the native-domain entry point.
 
-    ``fused=None`` auto-selects the single-kernel path whenever its
-    VMEM-resident intermediate fits the budget.
+    Accepts a batched source ``(nrhs, T, Z, 24, Y, Xh)`` (one kernel for
+    the whole RHS block).  ``fused=None`` auto-selects the single-kernel
+    path whenever its VMEM-resident intermediate — the full (batched)
+    odd spinor, sized by the *actual* dtype — fits the budget.
     """
     if fused is None:
-        fused = fused_dhat_fits(src_p.shape, src_p.dtype.itemsize)
+        fused = fused_dhat_fits(src_p.shape, src_p.dtype)
     if fused:
         return apply_dhat_planar_fused(u_e_p, u_o_p, src_p, kappa,
                                        interpret=interpret)

@@ -24,10 +24,19 @@ plane; the plane is written once.  Optionally the kernel fuses the
 ``psi0 + coeff * hop`` axpy of the even-odd preconditioned operator so the
 accumulator never round-trips through HBM (beyond-paper fusion; QWS does
 the analogous fusion on A64FX).
+
+Multi-RHS batching (Duerr-style right-hand-side parallelism): a batched
+planar source ``(nrhs, T, Z, 24, Y, Xh)`` runs through the SAME grid —
+each (t, z) step loads the gauge planes ONCE and applies the unrolled
+SU(3) x half-spinor math to the whole RHS block via broadcasting, so the
+flops-per-gauge-byte ratio grows ~nrhs x (the kernel is memory-bound on
+the gauge stream at nrhs=1).  :func:`hop_traffic_model` is the
+amortization model the benchmarks report next to measured numbers.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -82,7 +91,12 @@ def _proj(p: jnp.ndarray, mu: int, s: int):
 
 
 def _su3_mul(u: jnp.ndarray, h, dagger: bool):
-    """uh[s][a] = sum_b U[a,b] h[s][b] (or U^dag for ``dagger``)."""
+    """uh[s][a] = sum_b U[a,b] h[s][b] (or U^dag for ``dagger``).
+
+    The gauge planes ``(Y, Xh)`` broadcast against half-spinor planes that
+    may carry a leading RHS-batch axis ``(nrhs, Y, Xh)`` — one gauge load
+    serves the whole batch.
+    """
     out = [[None] * 3 for _ in range(2)]
     for sp in range(2):
         for a in range(3):
@@ -134,11 +148,14 @@ def _hop_plane(p, pzp, pzm, ptp, ptm, u_out, ux, uy, uz, ut,
     """One hopping block on a single (Y, Xh) site plane; returns the 24
     accumulator planes.
 
-    ``p`` is the center source plane ``(24, Y, Xh)``; ``pzp/pzm/ptp/ptm``
-    the z/t neighbor planes; ``u_out`` the output-parity gauge
-    ``(4, 18, Y, Xh)``; ``ux/uy/uz/ut`` the source-parity gauge planes the
-    backward hops read (``uz/ut`` already shifted to z-1 / t-1).  x/y
-    neighbors are in-register rolls of the center plane (the paper's
+    ``p`` is the center source plane ``(24, Y, Xh)`` — or, batched,
+    ``(24, nrhs, Y, Xh)`` with the RHS axis right behind the component
+    axis; ``pzp/pzm/ptp/ptm`` the z/t neighbor planes; ``u_out`` the
+    output-parity gauge ``(4, 18, Y, Xh)``; ``ux/uy/uz/ut`` the
+    source-parity gauge planes the backward hops read (``uz/ut`` already
+    shifted to z-1 / t-1).  Gauge planes never carry the RHS axis: they
+    broadcast, so they are loaded once per plane regardless of the batch.
+    x/y neighbors are in-register rolls of the center plane (the paper's
     sel/tbl/ext sequence), so no operands are needed for them.
     """
     Y, Xh = p.shape[-2], p.shape[-1]
@@ -169,7 +186,18 @@ def _hop_plane(p, pzp, pzm, ptp, ptm, u_out, ux, uy, uz, ut,
     return acc
 
 
-def _hop_kernel(*refs, out_parity: int, axpy_coeff: Optional[float]):
+def _plane(ref, batched: bool):
+    """Component-leading view of one pipelined spinor block.
+
+    Unbatched block ``(1, 1, 24, Y, Xh)`` -> ``(24, Y, Xh)``; batched
+    block ``(nrhs, 1, 1, 24, Y, Xh)`` -> ``(24, nrhs, Y, Xh)`` (component
+    axis first so the unrolled plane math indexes it the same way).
+    """
+    return jnp.swapaxes(ref[:, 0, 0], 0, 1) if batched else ref[0, 0]
+
+
+def _hop_kernel(*refs, out_parity: int, axpy_coeff: Optional[float],
+                batched: bool):
     """Kernel body; operates on one (Y, Xh) plane of the lattice."""
     if axpy_coeff is not None:
         (par_ref, pc, pzp, pzm, ptp, ptm,
@@ -179,17 +207,21 @@ def _hop_kernel(*refs, out_parity: int, axpy_coeff: Optional[float]):
          uo, uix, uiy, uizm, uitm, out_ref) = refs
         psi0 = None
 
-    p = pc[0, 0]                      # (24, Y, Xh)
+    p = _plane(pc, batched)           # (24, [nrhs,] Y, Xh)
     compute_dtype = p.dtype
-    acc = _hop_plane(p, pzp[0, 0], pzm[0, 0], ptp[0, 0], ptm[0, 0],
+    acc = _hop_plane(p, _plane(pzp, batched), _plane(pzm, batched),
+                     _plane(ptp, batched), _plane(ptm, batched),
                      uo[:, 0, 0], uix[0, 0, 0], uiy[0, 0, 0],
                      uizm[0, 0, 0], uitm[0, 0, 0],
                      par_ref[0, 0], out_parity)
 
     result = jnp.stack(acc).astype(compute_dtype)
     if axpy_coeff is not None:
-        result = psi0[0, 0] + compute_dtype.type(axpy_coeff) * result
-    out_ref[0, 0] = result
+        result = _plane(psi0, batched) + compute_dtype.type(axpy_coeff) * result
+    if batched:
+        out_ref[:, 0, 0] = jnp.swapaxes(result, 0, 1)
+    else:
+        out_ref[0, 0] = result
 
 
 def pltpu_roll(x: jnp.ndarray, shift: int, axis: int) -> jnp.ndarray:
@@ -209,14 +241,20 @@ def hop_block_ext_planar_native(u_out_p: jnp.ndarray,
     complex<->planar layout conversions — the pure-XLA fast path used by
     the distributed jnp backend and the dry-run.  ``parity_offset`` may be
     traced ((t0+z0) % 2 of the shard origin).
+
+    Accepts a batched source ``(nrhs, T+2, Z+2, 24, Y, Xh)`` (gauge never
+    batched); the RHS axis rides right behind the component axis through
+    the broadcasted SU(3) math — one gauge read per plane for the block.
     """
-    src = jnp.moveaxis(src_ext_p, 2, 0)        # (24, T+2, Z+2, Y, Xh)
+    # Component axis to the front; an optional leading RHS axis lands
+    # right behind it, so the trailing dims are (T, Z, Y, Xh) either way.
+    src = jnp.moveaxis(src_ext_p, -3, 0)       # (24, [N,] T+2, Z+2, Y, Xh)
     u_in = jnp.moveaxis(u_in_ext_p, 3, 1)      # (4, 18, T+2, Z+2, Y, Xh)
     u_out = jnp.moveaxis(u_out_p, 3, 1)        # (4, 18, T, Z, Y, Xh)
     Tl, Zl = u_out_p.shape[1], u_out_p.shape[2]
     Y, Xh = src_ext_p.shape[-2], src_ext_p.shape[-1]
 
-    c = src[:, 1:-1, 1:-1]                     # (24, T, Z, Y, Xh)
+    c = src[..., 1:-1, 1:-1, :, :]             # (24, [N,] T, Z, Y, Xh)
     t = jnp.arange(Tl).reshape(Tl, 1, 1, 1)
     z = jnp.arange(Zl).reshape(1, Zl, 1, 1)
     y = jnp.arange(Y).reshape(1, 1, Y, 1)
@@ -228,8 +266,10 @@ def hop_block_ext_planar_native(u_out_p: jnp.ndarray,
     psi_xb = jnp.where(mask_b, jnp.roll(c, +1, axis=-1), c)
     psi_yf = jnp.roll(c, -1, axis=-2)
     psi_yb = jnp.roll(c, +1, axis=-2)
-    psi_zf, psi_zb = src[:, 1:-1, 2:], src[:, 1:-1, :-2]
-    psi_tf, psi_tb = src[:, 2:, 1:-1], src[:, :-2, 1:-1]
+    psi_zf = src[..., 1:-1, 2:, :, :]
+    psi_zb = src[..., 1:-1, :-2, :, :]
+    psi_tf = src[..., 2:, 1:-1, :, :]
+    psi_tb = src[..., :-2, 1:-1, :, :]
 
     ux = u_in[0, :, 1:-1, 1:-1]
     uy = u_in[1, :, 1:-1, 1:-1]
@@ -247,17 +287,28 @@ def hop_block_ext_planar_native(u_out_p: jnp.ndarray,
         uh = _su3_mul(ub, _proj(pb, mu, +1), dagger=True)
         _recon_acc(acc, uh, mu, +1)
     out = jnp.stack(acc).astype(src_ext_p.dtype)
-    return jnp.moveaxis(out, 0, 2)             # (T, Z, 24, Y, Xh)
+    return jnp.moveaxis(out, 0, -3)            # ([N,] T, Z, 24, Y, Xh)
 
 
 def _build_specs(Tl: int, Zl: int, Y: int, Xh: int, halo: bool,
-                 with_axpy: bool):
-    """BlockSpecs for (parity, psi x5, U_out, U_in x4[, psi0])."""
-    sblk = (1, 1, SPINOR_COMPS, Y, Xh)
+                 with_axpy: bool, nrhs: Optional[int] = None):
+    """BlockSpecs for (parity, psi x5, U_out, U_in x4[, psi0]).
+
+    With ``nrhs`` the spinor blocks grow a leading RHS axis covered whole
+    by every grid step (block index 0); the gauge blocks are unchanged —
+    per grid step the pipeline fetches each gauge plane exactly once,
+    independent of the batch size.
+    """
+    if nrhs is None:
+        sblk = (1, 1, SPINOR_COMPS, Y, Xh)
+    else:
+        sblk = (nrhs, 1, 1, SPINOR_COMPS, Y, Xh)
     gblk1 = (1, 1, 1, GAUGE_COMPS, Y, Xh)
 
     def s(im):
-        return pl.BlockSpec(sblk, im)
+        if nrhs is None:
+            return pl.BlockSpec(sblk, im)
+        return pl.BlockSpec(sblk, lambda t, z, _im=im: (0, *_im(t, z)))
 
     def g(im):
         return pl.BlockSpec(gblk1, im)
@@ -302,6 +353,33 @@ def _build_specs(Tl: int, Zl: int, Y: int, Xh: int, halo: bool,
     return specs, out
 
 
+def hop_traffic_model(Tl: int, Zl: int, Y: int, Xh: int, *,
+                      nrhs: int = 1, itemsize: int = 4,
+                      with_axpy: bool = False) -> dict:
+    """HBM-traffic / flops model of one (batched) hopping-block call.
+
+    The gauge term is *independent of nrhs* — each (t, z) grid step loads
+    its gauge planes once and reuses them across the whole RHS block —
+    while spinor traffic and flops scale linearly, so the arithmetic
+    intensity approaches ``HOP_FLOPS_PER_SITE / (4 * spinor bytes)`` as
+    nrhs grows.  This is the model :mod:`benchmarks.bench_multirhs`
+    prints next to measured numbers, and what the kernel's
+    ``pl.CostEstimate`` is built from.
+    """
+    sites = Tl * Zl * Y * Xh
+    bytes_spinor = itemsize * SPINOR_COMPS * sites * nrhs   # read + written
+    bytes_gauge = 2 * itemsize * 4 * GAUGE_COMPS * sites    # both parities
+    total = 2 * bytes_spinor + bytes_gauge + (bytes_spinor if with_axpy else 0)
+    flops = HOP_FLOPS_PER_SITE * sites * nrhs
+    return {
+        "flops": flops,
+        "bytes_spinor": bytes_spinor,
+        "bytes_gauge": bytes_gauge,
+        "bytes_total": total,
+        "intensity_flops_per_byte": flops / total,
+    }
+
+
 def hop_block_planar(u_out_p: jnp.ndarray, u_in_p: jnp.ndarray,
                      src_p: jnp.ndarray, out_parity: int, *,
                      tz_offset: Tuple[int, int] = (0, 0),
@@ -312,51 +390,58 @@ def hop_block_planar(u_out_p: jnp.ndarray, u_in_p: jnp.ndarray,
 
     Args:
       u_out_p: planar gauge at output-parity sites ``(4, T, Z, 18, Y, Xh)``
-        (never halo-extended).
+        (never halo-extended, never batched).
       u_in_p: planar gauge at source-parity sites; halo-extended to
         ``(4, T+2, Z+2, ...)`` iff ``halo``.
-      src_p: planar source spinor ``(T, Z, 24, Y, Xh)``, halo-extended to
-        ``(T+2, Z+2, ...)`` iff ``halo``.
+      src_p: planar source spinor ``(T, Z, 24, Y, Xh)`` — or batched
+        ``(nrhs, T, Z, 24, Y, Xh)`` — halo-extended in (T, Z) iff ``halo``.
+        Batched sources run ONE kernel over the same (T, Z) grid with the
+        gauge planes loaded once per step for the whole block.
       out_parity: parity of the *output* (ODD for ``H_oe``).
       tz_offset: global (t0, z0) origin of this shard, for the parity mask.
       halo: neighbor planes come from halo-extended arrays instead of
         periodic wrap (the distributed path).
-      axpy: optional ``(coeff, psi0_p)`` fusing ``psi0 + coeff * hop``.
+      axpy: optional ``(coeff, psi0_p)`` fusing ``psi0 + coeff * hop``
+        (``psi0_p`` batched iff ``src_p`` is).
       interpret: force/disable interpret mode (default: auto off-TPU).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    Tl, Zl = ((src_p.shape[0] - 2, src_p.shape[1] - 2) if halo
-              else (src_p.shape[0], src_p.shape[1]))
-    _, Y, Xh = src_p.shape[2:]
+    batched = src_p.ndim == 6
+    nrhs = src_p.shape[0] if batched else None
+    lead = 1 if batched else 0
+    Tl, Zl = src_p.shape[lead], src_p.shape[lead + 1]
+    if halo:
+        Tl, Zl = Tl - 2, Zl - 2
+    Y, Xh = src_p.shape[-2], src_p.shape[-1]
     t0, z0 = tz_offset
 
     par = ((jnp.arange(Tl, dtype=jnp.int32)[:, None] + t0)
            + (jnp.arange(Zl, dtype=jnp.int32)[None, :] + z0)) % 2
 
     with_axpy = axpy is not None
-    in_specs, out_spec = _build_specs(Tl, Zl, Y, Xh, halo, with_axpy)
+    in_specs, out_spec = _build_specs(Tl, Zl, Y, Xh, halo, with_axpy,
+                                      nrhs=nrhs)
     coeff = float(axpy[0]) if with_axpy else None
 
-    bytes_spinor = src_p.dtype.itemsize * SPINOR_COMPS * Y * Xh * Tl * Zl
-    bytes_gauge = u_out_p.dtype.itemsize * 4 * GAUGE_COMPS * Y * Xh * Tl * Zl
-    cost = pl.CostEstimate(
-        flops=HOP_FLOPS_PER_SITE * Tl * Zl * Y * Xh,
-        bytes_accessed=2 * bytes_spinor + 2 * bytes_gauge
-        + (bytes_spinor if with_axpy else 0),
-        transcendentals=0)
+    model = hop_traffic_model(Tl, Zl, Y, Xh, nrhs=nrhs or 1,
+                              itemsize=src_p.dtype.itemsize,
+                              with_axpy=with_axpy)
+    cost = pl.CostEstimate(flops=model["flops"],
+                           bytes_accessed=model["bytes_total"],
+                           transcendentals=0)
 
     kernel = functools.partial(_hop_kernel, out_parity=out_parity,
-                               axpy_coeff=coeff)
+                               axpy_coeff=coeff, batched=batched)
     operands = [par, src_p, src_p, src_p, src_p, src_p,
                 u_out_p, u_in_p, u_in_p, u_in_p, u_in_p]
     if with_axpy:
         operands.append(axpy[1])
 
+    out_shape = ((nrhs,) if batched else ()) + (Tl, Zl, SPINOR_COMPS, Y, Xh)
     fn = pl.pallas_call(
         kernel,
-        out_shape=jax.ShapeDtypeStruct((Tl, Zl, SPINOR_COMPS, Y, Xh),
-                                       src_p.dtype),
+        out_shape=jax.ShapeDtypeStruct(out_shape, src_p.dtype),
         grid=(Tl, Zl),
         in_specs=in_specs,
         out_specs=out_spec,
@@ -380,7 +465,8 @@ _FUSED_SCRATCH_LIMIT_BYTES = 12 << 20
 
 def _dhat_kernel(par_ref, pc, pzp, pzm, ptp, ptm,
                  ue_all, ue_zm, ue_tm, uo_all, uo_zm, uo_tm,
-                 out_ref, tmp_ref, *, kappa2: float, Tl: int, Zl: int):
+                 out_ref, tmp_ref, *, kappa2: float, Tl: int, Zl: int,
+                 batched: bool):
     """Fused ``Dhat = 1 - kappa^2 H_eo H_oe`` over grid ``(2, T, Z)``.
 
     Pass 0 (``s == 0``) computes the odd-parity intermediate
@@ -392,17 +478,23 @@ def _dhat_kernel(par_ref, pc, pzp, pzm, ptp, ptm,
     ``apply_dhat_planar`` pays is gone (QWS applies the same fusion on
     A64FX; cf. Kanamori & Matsufuru on keeping intermediates
     SIMD-resident).
+
+    Batched blocks keep the scratch component-leading
+    ``(T, Z, 24, nrhs, Y, Xh)`` so both passes read planes in the layout
+    the unrolled math wants; the scratch grows nrhs x (see
+    :func:`fused_dhat_fits`).
     """
     s = pl.program_id(0)
     t = pl.program_id(1)
     z = pl.program_id(2)
     tz_par = par_ref[0, 0]
-    p = pc[0, 0]                      # psi_e center plane (24, Y, Xh)
+    p = _plane(pc, batched)           # psi_e center plane (24, [N,] Y, Xh)
     compute_dtype = p.dtype
 
     @pl.when(s == 0)
     def _pass_hoe():
-        acc = _hop_plane(p, pzp[0, 0], pzm[0, 0], ptp[0, 0], ptm[0, 0],
+        acc = _hop_plane(p, _plane(pzp, batched), _plane(pzm, batched),
+                         _plane(ptp, batched), _plane(ptm, batched),
                          uo_all[:, 0, 0],
                          ue_all[0, 0, 0], ue_all[1, 0, 0],
                          ue_zm[0, 0, 0], ue_tm[0, 0, 0],
@@ -422,7 +514,11 @@ def _dhat_kernel(par_ref, pc, pzp, pzm, ptp, ptm,
                          uo_zm[0, 0, 0], uo_tm[0, 0, 0],
                          tz_par, 0)
         hop2 = jnp.stack(acc).astype(compute_dtype)
-        out_ref[0, 0] = p - compute_dtype.type(kappa2) * hop2
+        result = p - compute_dtype.type(kappa2) * hop2
+        if batched:
+            out_ref[:, 0, 0] = jnp.swapaxes(result, 0, 1)
+        else:
+            out_ref[0, 0] = result
 
 
 def dhat_planar_fused(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
@@ -437,33 +533,44 @@ def dhat_planar_fused(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
     ``apply_dhat_planar`` path one spinor HBM write + pipelined re-read
     (5 planes per grid step) is eliminated.  Periodic single-shard only
     (the distributed path keeps the two-call structure so halos can
-    overlap).
+    overlap).  Batched sources ``(nrhs, T, Z, 24, Y, Xh)`` are supported;
+    the scratch then holds the whole batched intermediate.
 
-    The scratch is the whole odd-parity spinor: ``24 * T*Z*Y*Xh`` floats.
-    On a real TPU that caps the local volume (~12 MiB budget, e.g.
-    32x32x32x32 f32 exceeds it); callers should fall back to the unfused
-    path above that — :func:`fused_dhat_fits` tells you.
+    The scratch is the (batched) odd-parity spinor: ``nrhs * 24 *
+    T*Z*Y*Xh`` elements.  On a real TPU that caps the local volume (~12
+    MiB budget); callers should fall back to the unfused path above that
+    — :func:`fused_dhat_fits` (itemsize derived from the actual dtype)
+    tells you.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    Tl, Zl, _, Y, Xh = psi_e_p.shape
+    batched = psi_e_p.ndim == 6
+    nrhs = psi_e_p.shape[0] if batched else None
+    lead = 1 if batched else 0
+    Tl, Zl = psi_e_p.shape[lead], psi_e_p.shape[lead + 1]
+    Y, Xh = psi_e_p.shape[-2], psi_e_p.shape[-1]
     t0, z0 = tz_offset
 
-    tmp_bytes = psi_e_p.dtype.itemsize * SPINOR_COMPS * Tl * Zl * Y * Xh
+    tmp_bytes = psi_e_p.dtype.itemsize * math.prod(psi_e_p.shape)
     if not interpret and tmp_bytes > _FUSED_SCRATCH_LIMIT_BYTES:
         raise ValueError(
             f"fused Dhat intermediate needs {tmp_bytes} B of VMEM scratch "
             f"(> {_FUSED_SCRATCH_LIMIT_BYTES}); use the unfused "
-            "apply_dhat_planar path for this local volume")
+            "apply_dhat_planar path for this local volume / nrhs")
 
     par = ((jnp.arange(Tl, dtype=jnp.int32)[:, None] + t0)
            + (jnp.arange(Zl, dtype=jnp.int32)[None, :] + z0)) % 2
 
-    sblk = (1, 1, SPINOR_COMPS, Y, Xh)
+    if batched:
+        sblk = (nrhs, 1, 1, SPINOR_COMPS, Y, Xh)
+    else:
+        sblk = (1, 1, SPINOR_COMPS, Y, Xh)
     gblk1 = (1, 1, 1, GAUGE_COMPS, Y, Xh)
 
     def s(im):
-        return pl.BlockSpec(sblk, im)
+        if not batched:
+            return pl.BlockSpec(sblk, im)
+        return pl.BlockSpec(sblk, lambda s_, t, z, _im=im: (0, *_im(s_, t, z)))
 
     def g(im):
         return pl.BlockSpec(gblk1, im)
@@ -505,25 +612,28 @@ def dhat_planar_fused(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
                 + gauge_specs(lambda s_: s_))       # u_o shifts: pass 1
     out_spec = s(lambda _, t, z: (t, z, 0, 0, 0))
 
-    bytes_spinor = psi_e_p.dtype.itemsize * SPINOR_COMPS * Y * Xh * Tl * Zl
-    bytes_gauge = u_e_p.dtype.itemsize * 4 * GAUGE_COMPS * Y * Xh * Tl * Zl
+    # Two hopping blocks + axpy epilogue, but only one spinor read and
+    # one write touch HBM (the intermediate is scratch-resident).
+    n = nrhs or 1
+    m = hop_traffic_model(Tl, Zl, Y, Xh, nrhs=n,
+                          itemsize=psi_e_p.dtype.itemsize)
     cost = pl.CostEstimate(
-        flops=2 * HOP_FLOPS_PER_SITE * Tl * Zl * Y * Xh
-        + 2 * SPINOR_COMPS * Tl * Zl * Y * Xh,
-        bytes_accessed=2 * bytes_spinor + 4 * bytes_gauge,
+        flops=2 * m["flops"] + 2 * SPINOR_COMPS * Tl * Zl * Y * Xh * n,
+        bytes_accessed=2 * m["bytes_spinor"] + 2 * m["bytes_gauge"],
         transcendentals=0)
 
+    scratch_shape = ((Tl, Zl, SPINOR_COMPS)
+                     + ((nrhs,) if batched else ()) + (Y, Xh))
     kernel = functools.partial(_dhat_kernel, kappa2=float(kappa) ** 2,
-                               Tl=Tl, Zl=Zl)
+                               Tl=Tl, Zl=Zl, batched=batched)
+    out_shape = ((nrhs,) if batched else ()) + (Tl, Zl, SPINOR_COMPS, Y, Xh)
     fn = pl.pallas_call(
         kernel,
-        out_shape=jax.ShapeDtypeStruct((Tl, Zl, SPINOR_COMPS, Y, Xh),
-                                       psi_e_p.dtype),
+        out_shape=jax.ShapeDtypeStruct(out_shape, psi_e_p.dtype),
         grid=(2, Tl, Zl),
         in_specs=in_specs,
         out_specs=out_spec,
-        scratch_shapes=[pltpu.VMEM((Tl, Zl, SPINOR_COMPS, Y, Xh),
-                                   psi_e_p.dtype)],
+        scratch_shapes=[pltpu.VMEM(scratch_shape, psi_e_p.dtype)],
         interpret=interpret,
         cost_estimate=cost,
         compiler_params=compat.tpu_compiler_params(
@@ -534,7 +644,14 @@ def dhat_planar_fused(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
               u_e_p, u_e_p, u_e_p, u_o_p, u_o_p, u_o_p)
 
 
-def fused_dhat_fits(psi_e_p_shape, itemsize: int = 4) -> bool:
-    """Whether the fused kernel's VMEM-resident intermediate fits."""
-    Tl, Zl, comps, Y, Xh = psi_e_p_shape
-    return itemsize * comps * Tl * Zl * Y * Xh <= _FUSED_SCRATCH_LIMIT_BYTES
+def fused_dhat_fits(psi_e_p_shape, dtype=jnp.float32) -> bool:
+    """Whether the fused kernel's VMEM-resident intermediate fits.
+
+    ``psi_e_p_shape`` is the (possibly batched) planar spinor shape —
+    ``(T, Z, 24, Y, Xh)`` or ``(nrhs, T, Z, 24, Y, Xh)``; the scratch is
+    exactly that many elements.  ``dtype`` sizes one element (an int
+    itemsize is also accepted for backward compatibility) — f64 under
+    x64 halves the admissible volume versus f32, bf16 doubles it.
+    """
+    itemsize = dtype if isinstance(dtype, int) else jnp.dtype(dtype).itemsize
+    return itemsize * math.prod(psi_e_p_shape) <= _FUSED_SCRATCH_LIMIT_BYTES
