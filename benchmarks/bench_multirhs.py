@@ -24,7 +24,10 @@ import jax.numpy as jnp
 from repro import backends
 from repro.core import evenodd, solver, su3
 from repro.kernels import ops
-from repro.kernels.wilson_stencil import hop_traffic_model
+from repro.kernels.wilson_stencil import (dhat_stream_traffic_model,
+                                          fused_dhat_policy,
+                                          hop_traffic_model,
+                                          stream_ring_bytes)
 from .common import Row, smoke, time_fn, write_json
 
 KAPPA = 0.13
@@ -95,6 +98,52 @@ def _amortization_rows(shape) -> list:
                  f"gauge_bytes_nrhs1={g1};"
                  f"gauge_bytes_nrhs{nrhs_list[-1]}={gN};"
                  f"gauge_loaded_once_per_grid_step=true"))
+    return rows
+
+
+def _stream_rows(shape) -> list:
+    """Streaming plane-window rows: per-RHS time through the forced
+    ``pallas_fused_stream`` backend + the policy thresholds that decide
+    when batching pushes a lattice off the resident scratch.
+
+    The policy row is the multi-RHS story of the cap: the SAME lattice
+    walks resident -> stream as nrhs grows (the resident scratch scales
+    with nrhs, the ring scales with nrhs too but is window/T of it), so
+    batched solves keep the single-kernel fused path instead of paying
+    the two-kernel HBM round-trip.
+    """
+    rows: list[Row] = []
+    T, Z, Y, X = shape
+    on_tpu = jax.default_backend() == "tpu"
+    mode = "tpu" if on_tpu else "interpret"
+    opts = {} if on_tpu else {"interpret": True}
+    Ue, Uo, _, _ = _rand_eo(shape, seed=3)
+    bops = backends.make_wilson_ops("pallas_fused_stream", Ue, Uo, **opts)
+
+    for n in (1, 4) if smoke() else (1, 2, 4, 8):
+        _, _, e, _ = _rand_eo(shape, seed=4, nrhs=n)
+        v = bops.to_domain_batched(e)
+        fn = jax.jit(lambda w: bops.apply_dhat_native_batched(w, KAPPA))
+        us = time_fn(fn, v, **_timing_kw())
+        m = dhat_stream_traffic_model(T, Z, Y, X // 2, nrhs=n)
+        rows.append((f"multirhs_dhat_stream_nrhs{n}", us,
+                     f"mode={mode};per_rhs_us={us / n:.1f};"
+                     f"vmem_ring_bytes={m['vmem_ring_bytes']};"
+                     f"recompute_rows={m['recompute_rows']};"
+                     f"model_intensity_flops_per_byte="
+                     f"{m['intensity_flops_per_byte']:.2f}"))
+
+    # Policy walk: nrhs at which the resident scratch overflows but the
+    # ring still fits — machine-checkable evidence the auto backend
+    # keeps a fused single kernel where PR 3 fell back to two kernels.
+    pshape = (16, 16, 24, 16, 16)          # 16x16x16x32, planar
+    walk = {n: fused_dhat_policy((n, *pshape) if n > 1 else pshape)
+            for n in (1, 4, 8, 64)}
+    assert walk[1] == "resident" and walk[8] == "stream", walk
+    rows.append(("multirhs_stream_policy_walk", 0.0,
+                 "lattice=16x16x16x32;"
+                 + ";".join(f"nrhs{n}={p}" for n, p in walk.items())
+                 + f";ring_bytes_nrhs8={stream_ring_bytes((8, *pshape))}"))
     return rows
 
 
@@ -174,6 +223,7 @@ def _mixed_precision_rows(shape) -> list:
 def run() -> list:
     shape = (4, 4, 4, 8)
     rows = _amortization_rows(shape)
+    rows.extend(_stream_rows(shape))
     rows.extend(_agreement_rows(shape))
     rows.extend(_mixed_precision_rows(shape))
     write_json("multirhs", rows)

@@ -40,8 +40,12 @@ Built-in entries (see :mod:`repro.backends.wilson`):
 * ``"jnp"``          — reference pure-XLA path (:mod:`repro.core.evenodd`);
 * ``"pallas"``       — planar Pallas stencil, one kernel per hopping block;
 * ``"pallas_fused"`` — Dhat as ONE kernel, intermediate VMEM-resident
-  (auto-falls back to the two-kernel path when it exceeds the scratch
-  budget);
+  (three-way auto policy: falls to the streaming plane-window kernel
+  when the resident scratch exceeds the budget, then to the two-kernel
+  path);
+* ``"pallas_fused_stream"`` — the plane-window kernel, forced: the VMEM
+  scratch is a 4-row ring of odd-intermediate t-planes, so the local
+  volume is never capped by T;
 * ``"distributed"``  — shard_map over a device mesh.
 
 Third parties extend via :func:`register_backend`.

@@ -1,5 +1,6 @@
 """Built-in Wilson operator backends: jnp / pallas / pallas_fused /
-distributed, all bound through :func:`repro.backends.register_backend`.
+pallas_fused_stream / distributed, all bound through
+:func:`repro.backends.register_backend`.
 
 Factories take the complex even/odd gauge halves ``(4, T, Z, Y, Xh, 3, 3)``
 and do their layout conversion / sharding once at bind time.  Each backend
@@ -7,7 +8,8 @@ declares its native vector domain (:class:`~repro.backends.WilsonOps`):
 
 * ``"jnp"``          — native domain ``"complex"``; encode/decode are
   identity.
-* ``"pallas"`` / ``"pallas_fused"`` — native domain ``"planar"``: the
+* ``"pallas"`` / ``"pallas_fused"`` / ``"pallas_fused_stream"`` — native
+  domain ``"planar"``: the
   re/im-separated ``(T, Z, 24, Y, Xh)`` float layout the kernel eats
   (:mod:`repro.kernels.layout`).  The dagger acts on the planar
   spin-component planes directly (gamma5 = sign flip of planes 12..23),
@@ -68,9 +70,13 @@ def make_jnp_backend(U_e, U_o, **_unused) -> WilsonOps:
         domain="complex")
 
 
-def _make_pallas(U_e, U_o, *, fused: Optional[bool],
+def _make_pallas(U_e, U_o, *, fused,
                  interpret: Optional[bool] = None,
                  name: str, dtype=jnp.float32) -> WilsonOps:
+    # ``fused``: None (three-way auto policy), True/"resident",
+    # "stream", or False/"unfused" — forwarded per call to
+    # ops.apply_dhat_planar_any so the policy sees the actual
+    # (possibly batched) vector shape.
     u_e_p, u_o_p = ops.make_planar_fields(U_e, U_o, dtype=dtype)
 
     def to_domain(psi):
@@ -120,13 +126,32 @@ def make_pallas_fused_backend(U_e, U_o, *, interpret=None,
                               dtype=jnp.float32, **_unused) -> WilsonOps:
     """Dhat as a single fused kernel; intermediate never touches HBM.
 
-    Falls back to the two-kernel path automatically when the lattice's
-    VMEM-resident intermediate — sized by the actual compute ``dtype``
-    and the RHS batch — exceeds the scratch budget (``fused=None``
-    auto-select in :func:`repro.kernels.ops.apply_dhat_planar_any`).
+    Auto-selects the three-way fused policy (``fused=None`` in
+    :func:`repro.kernels.ops.apply_dhat_planar_any`): the VMEM-resident
+    single kernel when the whole (batched) intermediate fits the scratch
+    budget — sized by the actual compute ``dtype`` and the RHS batch —
+    the streaming plane-window kernel when only its t-plane ring does,
+    and the two-kernel path as the last silent-correct fallback.
     """
     return _make_pallas(U_e, U_o, fused=None, interpret=interpret,
                         name="pallas_fused", dtype=dtype)
+
+
+def make_pallas_fused_stream_backend(U_e, U_o, *, interpret=None,
+                                     dtype=jnp.float32,
+                                     **_unused) -> WilsonOps:
+    """Streaming plane-window fused Dhat, forced (no auto-policy).
+
+    One kernel per application whose VMEM scratch is a
+    :data:`~repro.kernels.wilson_stencil.STREAM_WINDOW_ROWS`-row ring of
+    odd-intermediate t-planes — the working set is independent of T, so
+    there is no resident-scratch local-volume cap.  Selecting this
+    backend by name pins the streaming kernel even for lattices the
+    resident scratch could hold (useful for benchmarking the window
+    overhead); the ``pallas_fused`` backend auto-picks between the two.
+    """
+    return _make_pallas(U_e, U_o, fused="stream", interpret=interpret,
+                        name="pallas_fused_stream", dtype=dtype)
 
 
 def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
@@ -229,4 +254,5 @@ def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
 register_backend("jnp", make_jnp_backend)
 register_backend("pallas", make_pallas_backend)
 register_backend("pallas_fused", make_pallas_fused_backend)
+register_backend("pallas_fused_stream", make_pallas_fused_stream_backend)
 register_backend("distributed", make_distributed_backend)

@@ -21,6 +21,11 @@ Two production features beyond the single-RHS f32 path:
   repeat until the *f64* tolerance is met.  The expensive f64 operator is
   applied once per outer pass instead of twice per Krylov iteration —
   the QWS / Kanamori-Matsufuru single-precision-inner strategy.
+* **Compensated (f32-accumulate) reductions** — Krylov scalars of bf16
+  vector domains are accumulated in f32 and cast back down at the axpy
+  (see :data:`COMPENSATED_REDUCTIONS`), so ``inner_dtype="bf16"``
+  converges at ``inner_tol`` values where naive bf16 accumulation
+  stalls on saturated norms.
 """
 from __future__ import annotations
 
@@ -31,13 +36,48 @@ import jax
 import jax.numpy as jnp
 
 
+# Krylov scalars (<a,b>, |r|^2, alpha/beta/rho/omega) of sub-f32 vector
+# domains (bf16 planar vectors of the mixed-precision inner solve)
+# accumulate in f32.  A naive bf16 sum saturates once the partial sum
+# reaches ~256 x the element magnitude (half-ulp rounding swallows every
+# further term), so |b|^2 of a few-thousand-element vector is off by an
+# order of magnitude and alpha/beta turn to noise — the solve stalls.
+# f32 accumulation fixes the scalars while the vectors (and all the
+# bandwidth-heavy operator work) stay bf16: the scalars are cast back to
+# the leaf dtype at the axpy, never promoting the iterate.  Module-level
+# so tests can flip it to demonstrate the stall.
+COMPENSATED_REDUCTIONS = True
+
+_LOW_PRECISION = (jnp.dtype(jnp.bfloat16), jnp.dtype(jnp.float16))
+
+
+def _acc(x):
+    """Upcast a sub-f32 leaf to the f32 accumulation dtype (no-op for
+    f32/f64/complex leaves, or with compensation disabled)."""
+    if COMPENSATED_REDUCTIONS and x.dtype in _LOW_PRECISION:
+        return x.astype(jnp.float32)
+    return x
+
+
+def _apply_scalar(alpha, leaf):
+    """``alpha`` ready to multiply ``leaf`` without promoting it: an f32
+    Krylov scalar meeting a bf16 leaf is cast *down* (bf16 stays the
+    vector dtype; the scalar was merely accumulated more accurately)."""
+    if not hasattr(alpha, "astype") or not hasattr(leaf, "dtype"):
+        return alpha
+    if jnp.result_type(alpha.dtype, leaf.dtype) != jnp.dtype(leaf.dtype):
+        return alpha.astype(leaf.dtype)
+    return alpha
+
+
 def _vdot(a, b):
     leaves_a, leaves_b = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
-    return sum(jnp.vdot(x, y) for x, y in zip(leaves_a, leaves_b))
+    return sum(jnp.vdot(_acc(x), _acc(y)) for x, y in zip(leaves_a, leaves_b))
 
 
 def _axpy(alpha, x, y):
-    return jax.tree_util.tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+    return jax.tree_util.tree_map(
+        lambda xi, yi: _apply_scalar(alpha, yi) * xi + yi, x, y)
 
 
 def _scale(alpha, x):
@@ -51,10 +91,12 @@ def _norm2(x):
 # --- per-column (batched) vector algebra; leading axis = RHS index ------
 
 def _bvdot(a, b):
-    """Per-column ``<a, b>``: reduces every axis but the leading one."""
+    """Per-column ``<a, b>``: reduces every axis but the leading one
+    (f32-accumulated for sub-f32 leaves, like :func:`_vdot`)."""
     leaves_a, leaves_b = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
     out = None
     for x, y in zip(leaves_a, leaves_b):
+        x, y = _acc(x), _acc(y)
         s = jnp.sum((jnp.conj(x) * y).reshape(x.shape[0], -1), axis=1)
         out = s if out is None else out + s
     return out
@@ -70,9 +112,10 @@ def _bb(alpha, leaf):
 
 
 def _baxpy(alpha, x, y):
-    """``y + alpha * x`` with a per-column ``alpha``."""
+    """``y + alpha * x`` with a per-column ``alpha`` (cast down to the
+    leaf dtype so an f32-accumulated scalar never promotes the batch)."""
     return jax.tree_util.tree_map(
-        lambda xi, yi: _bb(alpha, xi) * xi + yi, x, y)
+        lambda xi, yi: _bb(_apply_scalar(alpha, xi), xi) * xi + yi, x, y)
 
 
 def _tiny(dtype):

@@ -9,8 +9,8 @@ import jax.numpy as jnp
 
 from repro.core import evenodd
 from . import layout
-from .wilson_stencil import (dhat_planar_fused, fused_dhat_fits,
-                             hop_block_planar)
+from .wilson_stencil import (dhat_planar_fused, dhat_planar_fused_stream,
+                             fused_dhat_policy, hop_block_planar)
 
 
 @functools.partial(jax.jit, static_argnames=("out_parity", "halo", "interpret"))
@@ -82,21 +82,52 @@ def apply_dhat_planar_fused(u_e_p, u_o_p, psi_e_p, kappa: float, *,
                              interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("kappa", "interpret"))
+def apply_dhat_planar_stream(u_e_p, u_o_p, psi_e_p, kappa: float, *,
+                             interpret: Optional[bool] = None):
+    """Streaming (plane-window) fused Dhat — ONE kernel whose VMEM
+    scratch is a 4-row ring of odd-intermediate t-planes instead of the
+    full lattice, so there is no T-dependent local-volume cap (jit'd).
+    See :func:`repro.kernels.wilson_stencil.dhat_planar_fused_stream`.
+    """
+    return dhat_planar_fused_stream(u_e_p, u_o_p, psi_e_p, kappa,
+                                    interpret=interpret)
+
+
 def apply_dhat_planar_any(u_e_p, u_o_p, src_p, kappa: float, *,
                           fused=None,
                           interpret: Optional[bool] = None):
     """Planar-in/planar-out Dhat — the native-domain entry point.
 
     Accepts a batched source ``(nrhs, T, Z, 24, Y, Xh)`` (one kernel for
-    the whole RHS block).  ``fused=None`` auto-selects the single-kernel
-    path whenever its VMEM-resident intermediate — the full (batched)
-    odd spinor, sized by the *actual* dtype — fits the budget.
+    the whole RHS block).  ``fused`` selects the path:
+
+    * ``None`` — the three-way auto policy
+      (:func:`~repro.kernels.wilson_stencil.fused_dhat_policy`, sized by
+      the *actual* dtype and nrhs): single-kernel resident scratch when
+      the whole (batched) odd intermediate fits the VMEM budget, the
+      streaming plane-window kernel when only the t-plane ring does, and
+      the two-kernel fallback otherwise — silently correct in all three.
+    * ``True`` / ``"resident"`` — force the resident single kernel.
+    * ``"stream"`` — force the streaming plane-window kernel.
+    * ``False`` / ``"unfused"`` — force the two-kernel path.
     """
     if fused is None:
-        fused = fused_dhat_fits(src_p.shape, src_p.dtype)
-    if fused:
+        fused = fused_dhat_policy(src_p.shape, src_p.dtype)
+    elif fused is True:
+        fused = "resident"
+    elif fused is False:
+        fused = "unfused"
+    if fused == "resident":
         return apply_dhat_planar_fused(u_e_p, u_o_p, src_p, kappa,
                                        interpret=interpret)
+    if fused == "stream":
+        return apply_dhat_planar_stream(u_e_p, u_o_p, src_p, kappa,
+                                        interpret=interpret)
+    if fused != "unfused":
+        raise ValueError(
+            f"fused={fused!r}: expected None, bool, 'resident', "
+            "'stream' or 'unfused'")
     return apply_dhat_planar(u_e_p, u_o_p, src_p, kappa,
                              interpret=interpret)
 

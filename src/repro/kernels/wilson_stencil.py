@@ -655,3 +655,277 @@ def fused_dhat_fits(psi_e_p_shape, dtype=jnp.float32) -> bool:
     """
     itemsize = dtype if isinstance(dtype, int) else jnp.dtype(dtype).itemsize
     return itemsize * math.prod(psi_e_p_shape) <= _FUSED_SCRATCH_LIMIT_BYTES
+
+
+# ---------------------------------------------------------------------------
+# Streaming (plane-window) fused Dhat: the VMEM cap lifted.
+# ---------------------------------------------------------------------------
+
+# Ring rows of odd-intermediate t-planes held in VMEM by the streaming
+# kernel: 3 live rows cover the +-t stencil reach of the second hopping
+# block, +1 is the row being produced while the previous three are
+# consumed (the double buffer).  This is the sliding working set of the
+# KNL/AVX-512 predecessors (Kanamori & Matsufuru 1712.01505, 1811.00893)
+# mapped onto the TPU pipeline.
+STREAM_WINDOW_ROWS = 4
+
+
+def stream_ring_bytes(psi_e_p_shape, dtype=jnp.float32,
+                      window: int = STREAM_WINDOW_ROWS) -> int:
+    """VMEM bytes of the streaming kernel's t-plane ring.
+
+    The ring holds ``window`` t-rows of the (batched) odd intermediate —
+    ``window * Z * 24 * nrhs * Y * Xh`` elements — so its size is derived
+    from the actual ``dtype`` and the RHS batch but is *independent of
+    T*: that is the cap-lift.  ``psi_e_p_shape`` as in
+    :func:`fused_dhat_fits`.
+    """
+    itemsize = dtype if isinstance(dtype, int) else jnp.dtype(dtype).itemsize
+    lead = 1 if len(psi_e_p_shape) == 6 else 0
+    per_row = math.prod(psi_e_p_shape) // psi_e_p_shape[lead]
+    return itemsize * window * per_row
+
+
+def fused_dhat_stream_fits(psi_e_p_shape, dtype=jnp.float32) -> bool:
+    """Whether the streaming kernel's t-plane ring fits the VMEM budget."""
+    return (stream_ring_bytes(psi_e_p_shape, dtype)
+            <= _FUSED_SCRATCH_LIMIT_BYTES)
+
+
+def fused_dhat_policy(psi_e_p_shape, dtype=jnp.float32) -> str:
+    """Three-way fused-Dhat path selection for a planar spinor shape.
+
+    ``"resident"`` — the whole (batched) odd intermediate fits the VMEM
+    scratch budget: use :func:`dhat_planar_fused` (fewest HBM bytes).
+    ``"stream"`` — it doesn't, but the :data:`STREAM_WINDOW_ROWS`-row
+    plane window does: use :func:`dhat_planar_fused_stream` (same fusion,
+    T-independent scratch, 2 recomputed boundary rows).
+    ``"unfused"`` — even one window row ring is too large (enormous
+    z-planes): fall back to the two-kernel ``apply_dhat_planar`` path,
+    which needs no scratch at all.
+    """
+    if fused_dhat_fits(psi_e_p_shape, dtype):
+        return "resident"
+    if fused_dhat_stream_fits(psi_e_p_shape, dtype):
+        return "stream"
+    return "unfused"
+
+
+def dhat_stream_traffic_model(Tl: int, Zl: int, Y: int, Xh: int, *,
+                              nrhs: int = 1, itemsize: int = 4,
+                              window: int = STREAM_WINDOW_ROWS) -> dict:
+    """HBM-traffic / flops / scratch model of one streaming fused Dhat.
+
+    Versus the resident fused kernel the streaming variant recomputes 2
+    boundary t-rows of ``H_oe`` (rows T-1 and 0 are produced twice so the
+    periodic wrap reads fresh ring slots) and re-fetches their operand
+    planes — a ``(T+2)/T`` factor on the first hopping block — while its
+    VMEM scratch shrinks from the full lattice to the ``window``-row
+    ring.  The :mod:`benchmarks` print these numbers next to measured
+    times, and the kernel's ``pl.CostEstimate`` is built from them.
+    """
+    m = hop_traffic_model(Tl, Zl, Y, Xh, nrhs=nrhs, itemsize=itemsize)
+    sites = Tl * Zl * Y * Xh
+    produce_scale = (Tl + 2) / Tl
+    flops = (int(m["flops"] * produce_scale)      # H_oe incl. recompute
+             + m["flops"]                          # H_eo
+             + 2 * SPINOR_COMPS * sites * nrhs)    # axpy epilogue
+    spinor1 = itemsize * SPINOR_COMPS * sites * nrhs
+    bytes_spinor = int(spinor1 * (produce_scale + 2))  # psi in, psi0, out
+    bytes_gauge = int(m["bytes_gauge"] * (produce_scale + 1))
+    shape = ((nrhs,) if nrhs > 1 else ()) + (Tl, Zl, SPINOR_COMPS, Y, Xh)
+    return {
+        "flops": flops,
+        "bytes_spinor": bytes_spinor,
+        "bytes_gauge": bytes_gauge,
+        "bytes_total": bytes_spinor + bytes_gauge,
+        "intensity_flops_per_byte": flops / (bytes_spinor + bytes_gauge),
+        "recompute_rows": 2,
+        "window_rows": window,
+        "vmem_ring_bytes": stream_ring_bytes(shape, itemsize,
+                                             window=window),
+        "vmem_resident_bytes": itemsize * math.prod(shape),
+    }
+
+
+def _dhat_stream_kernel(par_src, par_out, pc, pzp, pzm, ptp, ptm, psi0,
+                        uo_src, ue_src, ue_zm, ue_tm,
+                        ue_out, uo_out, uo_zm, uo_tm,
+                        out_ref, ring_ref, *, kappa2: float, Tl: int,
+                        Zl: int, window: int, batched: bool):
+    """Streaming fused ``Dhat`` over grid ``(T + 3, Z)``.
+
+    Step ``(s, z)`` runs two interleaved stages against a ``window``-row
+    ring of odd-intermediate t-planes:
+
+    * **produce** (``s <= T+1``): ``ring[s % window][z] = H_oe psi_e``
+      for source row ``ts = (s-1) % T`` — the walk starts at row ``T-1``
+      and ends by re-producing row ``0``, so both wrap neighbors of the
+      consume stage read freshly-computed slots and the periodic
+      boundary stays exact (2 recomputed rows total);
+    * **consume** (``s >= 3``): output row ``to = (s-3) % T`` applies
+      ``H_eo`` to ring rows ``to-1 / to / to+1`` (slots ``(s-3..s-1) %
+      window`` — all complete, and all distinct from the slot being
+      produced this step) and writes the fused ``psi0 - kappa^2 (...)``
+      epilogue.
+
+    The lag of 3 grid rows between produce and consume guarantees row
+    ``to+1`` is complete across the whole z extent before any of its
+    planes are read, so the ring never needs intra-step ordering.
+    """
+    s = pl.program_id(0)
+    z = pl.program_id(1)
+    compute_dtype = out_ref.dtype
+
+    @pl.when(s <= Tl + 1)
+    def _produce():
+        p = _plane(pc, batched)
+        acc = _hop_plane(p, _plane(pzp, batched), _plane(pzm, batched),
+                         _plane(ptp, batched), _plane(ptm, batched),
+                         uo_src[:, 0, 0],
+                         ue_src[0, 0, 0], ue_src[1, 0, 0],
+                         ue_zm[0, 0, 0], ue_tm[0, 0, 0],
+                         par_src[0, 0], 1)
+        ring_ref[s % window, z] = jnp.stack(acc).astype(compute_dtype)
+
+    @pl.when(s >= 3)
+    def _consume():
+        tc = ring_ref[(s - 2) % window, z]
+        tzp = ring_ref[(s - 2) % window, (z + 1) % Zl]
+        tzm = ring_ref[(s - 2) % window, (z - 1) % Zl]
+        ttp = ring_ref[(s - 1) % window, z]
+        ttm = ring_ref[(s - 3) % window, z]
+        acc = _hop_plane(tc, tzp, tzm, ttp, ttm,
+                         ue_out[:, 0, 0],
+                         uo_out[0, 0, 0], uo_out[1, 0, 0],
+                         uo_zm[0, 0, 0], uo_tm[0, 0, 0],
+                         par_out[0, 0], 0)
+        hop2 = jnp.stack(acc).astype(compute_dtype)
+        result = _plane(psi0, batched) - compute_dtype.type(kappa2) * hop2
+        if batched:
+            out_ref[:, 0, 0] = jnp.swapaxes(result, 0, 1)
+        else:
+            out_ref[0, 0] = result
+
+
+def dhat_planar_fused_stream(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
+                             psi_e_p: jnp.ndarray, kappa: float, *,
+                             tz_offset: Tuple[int, int] = (0, 0),
+                             window: int = STREAM_WINDOW_ROWS,
+                             interpret: Optional[bool] = None
+                             ) -> jnp.ndarray:
+    """``(1 - kappa^2 H_eo H_oe) psi_e`` as ONE kernel with a plane-window
+    VMEM scratch — the cap-lifting variant of :func:`dhat_planar_fused`.
+
+    Instead of the full-lattice odd intermediate, only a ``window``-row
+    ring of t-planes lives in VMEM (``window * Z * 24 * nrhs * Y * Xh``
+    elements — independent of T), double-buffered: each grid step
+    produces ``H_oe`` of one t-row into the slot the consume stage is not
+    reading while the fused ``H_eo`` + axpy epilogue consumes rows three
+    steps behind.  The periodic t-wrap stays exact by producing the two
+    boundary rows twice (rows ``T-1`` and ``0`` — see
+    :func:`dhat_stream_traffic_model` for the accounted overhead).
+    Periodic single-shard only, like the resident variant; batched
+    sources ``(nrhs, T, Z, 24, Y, Xh)`` run one kernel with each gauge
+    plane fetched once per grid step for the whole block.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if window < STREAM_WINDOW_ROWS:
+        raise ValueError(
+            f"stream window needs >= {STREAM_WINDOW_ROWS} rows (3 live "
+            f"for the +-t stencil reach + 1 produce slot); got {window}")
+    batched = psi_e_p.ndim == 6
+    nrhs = psi_e_p.shape[0] if batched else None
+    lead = 1 if batched else 0
+    Tl, Zl = psi_e_p.shape[lead], psi_e_p.shape[lead + 1]
+    Y, Xh = psi_e_p.shape[-2], psi_e_p.shape[-1]
+    t0, z0 = tz_offset
+
+    ring_bytes = stream_ring_bytes(psi_e_p.shape, psi_e_p.dtype,
+                                   window=window)
+    if not interpret and ring_bytes > _FUSED_SCRATCH_LIMIT_BYTES:
+        raise ValueError(
+            f"streaming Dhat ring needs {ring_bytes} B of VMEM "
+            f"(> {_FUSED_SCRATCH_LIMIT_BYTES}); this z-plane volume / "
+            "nrhs needs the unfused apply_dhat_planar path")
+
+    par = ((jnp.arange(Tl, dtype=jnp.int32)[:, None] + t0)
+           + (jnp.arange(Zl, dtype=jnp.int32)[None, :] + z0)) % 2
+
+    if batched:
+        sblk = (nrhs, 1, 1, SPINOR_COMPS, Y, Xh)
+    else:
+        sblk = (1, 1, SPINOR_COMPS, Y, Xh)
+    gblk1 = (1, 1, 1, GAUGE_COMPS, Y, Xh)
+    gblk4 = (4, 1, 1, GAUGE_COMPS, Y, Xh)
+
+    def spec(im):
+        if not batched:
+            return pl.BlockSpec(sblk, im)
+        return pl.BlockSpec(sblk, lambda s, z, _im=im: (0, *_im(s, z)))
+
+    def g(im):
+        return pl.BlockSpec(gblk1, im)
+
+    def g4(im):
+        return pl.BlockSpec(gblk4, im)
+
+    def par_spec(im):
+        return pl.BlockSpec((1, 1), im, memory_space=pltpu.SMEM)
+
+    # Produce stage reads source row ts = (s-1) % T; consume stage reads
+    # output row to = (s-3) % T.  All wraps are modular block indices, so
+    # the two out-of-range lead-in/lead-out rows of each stage fetch
+    # valid (revisited) blocks and are simply gated off in the kernel.
+    in_specs = [
+        par_spec(lambda s, z: ((s - 1) % Tl, z)),            # par @ ts
+        par_spec(lambda s, z: ((s - 3) % Tl, z)),            # par @ to
+        spec(lambda s, z: ((s - 1) % Tl, z, 0, 0, 0)),       # psi center
+        spec(lambda s, z: ((s - 1) % Tl, (z + 1) % Zl, 0, 0, 0)),
+        spec(lambda s, z: ((s - 1) % Tl, (z - 1) % Zl, 0, 0, 0)),
+        spec(lambda s, z: (s % Tl, z, 0, 0, 0)),             # t+1 of ts
+        spec(lambda s, z: ((s - 2) % Tl, z, 0, 0, 0)),       # t-1 of ts
+        spec(lambda s, z: ((s - 3) % Tl, z, 0, 0, 0)),       # psi0 @ to
+        g4(lambda s, z: (0, (s - 1) % Tl, z, 0, 0, 0)),      # u_o all @ ts
+        g4(lambda s, z: (0, (s - 1) % Tl, z, 0, 0, 0)),      # u_e x/y @ ts
+        g(lambda s, z: (2, (s - 1) % Tl, (z - 1) % Zl, 0, 0, 0)),
+        g(lambda s, z: (3, (s - 2) % Tl, z, 0, 0, 0)),
+        g4(lambda s, z: (0, (s - 3) % Tl, z, 0, 0, 0)),      # u_e all @ to
+        g4(lambda s, z: (0, (s - 3) % Tl, z, 0, 0, 0)),      # u_o x/y @ to
+        g(lambda s, z: (2, (s - 3) % Tl, (z - 1) % Zl, 0, 0, 0)),
+        g(lambda s, z: (3, (s - 4) % Tl, z, 0, 0, 0)),
+    ]
+    out_spec = spec(lambda s, z: ((s - 3) % Tl, z, 0, 0, 0))
+
+    n = nrhs or 1
+    model = dhat_stream_traffic_model(Tl, Zl, Y, Xh, nrhs=n,
+                                      itemsize=psi_e_p.dtype.itemsize,
+                                      window=window)
+    cost = pl.CostEstimate(flops=model["flops"],
+                           bytes_accessed=model["bytes_total"],
+                           transcendentals=0)
+
+    ring_shape = ((window, Zl, SPINOR_COMPS)
+                  + ((nrhs,) if batched else ()) + (Y, Xh))
+    kernel = functools.partial(_dhat_stream_kernel,
+                               kappa2=float(kappa) ** 2, Tl=Tl, Zl=Zl,
+                               window=window, batched=batched)
+    out_shape = ((nrhs,) if batched else ()) + (Tl, Zl, SPINOR_COMPS, Y, Xh)
+    fn = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(out_shape, psi_e_p.dtype),
+        grid=(Tl + 3, Zl),
+        in_specs=in_specs,
+        out_specs=out_spec,
+        scratch_shapes=[pltpu.VMEM(ring_shape, psi_e_p.dtype)],
+        interpret=interpret,
+        cost_estimate=cost,
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        name="wilson_dhat_fused_stream",
+    )
+    return fn(par, par,
+              psi_e_p, psi_e_p, psi_e_p, psi_e_p, psi_e_p, psi_e_p,
+              u_o_p, u_e_p, u_e_p, u_e_p,
+              u_e_p, u_o_p, u_o_p, u_o_p)

@@ -39,7 +39,10 @@ def main(argv=None):
     ap.add_argument("--backend", default="auto",
                     choices=["auto"] + backends.available_backends(),
                     help="operator backend (registry name); 'auto' picks "
-                         "jnp off-TPU and pallas_fused on TPU")
+                         "jnp off-TPU and pallas_fused on TPU (whose "
+                         "three-way policy streams a plane window when "
+                         "the resident fused scratch overflows; "
+                         "pallas_fused_stream forces that kernel)")
     ap.add_argument("--nrhs", type=int, default=1,
                     help="number of right-hand sides per solve; >1 runs "
                          "the batched kernels (gauge field streamed once "

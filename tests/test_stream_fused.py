@@ -1,0 +1,249 @@
+"""Streaming plane-window fused Dhat: the three-way VMEM policy at its
+exact byte boundaries, the cap-lift, and silent-correct fallback.
+
+The resident fused kernel's scratch is the whole (batched) odd
+intermediate — ``itemsize * nrhs * 24 * T*Z*Y*Xh`` bytes against a 12 MiB
+budget.  The streaming kernel replaces it with a 4-row t-plane ring whose
+size is independent of T.  These tests pin the selection policy
+(resident -> stream -> unfused) at shapes exactly at / one plane over the
+budget for f32/f64/bf16 and nrhs in {1, 8}, and that every path computes
+the same operator.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.core import evenodd, su3
+from repro.kernels import layout, ops
+from repro.kernels import wilson_stencil as ws
+from repro.kernels.wilson_stencil import (
+    STREAM_WINDOW_ROWS, dhat_planar_fused_stream, dhat_stream_traffic_model,
+    fused_dhat_fits, fused_dhat_policy, fused_dhat_stream_fits,
+    stream_ring_bytes)
+
+LIMIT = ws._FUSED_SCRATCH_LIMIT_BYTES
+KAPPA = 0.13
+
+ITEMSIZE = {"f32": 4, "f64": 8, "bf16": 2}
+DTYPE = {"f32": jnp.float32, "f64": jnp.float64, "bf16": jnp.bfloat16}
+
+
+def _resident_boundary_shape(itemsize, nrhs):
+    """Planar shape whose resident scratch is EXACTLY the budget."""
+    sites = LIMIT // (24 * itemsize * nrhs)     # = T*Z*Y*Xh at the budget
+    T, Z, Y = 16, 16, 8
+    Xh = sites // (T * Z * Y)
+    assert T * Z * Y * Xh == sites, (itemsize, nrhs)
+    shape = (T, Z, 24, Y, Xh)
+    return (nrhs, *shape) if nrhs > 1 else shape
+
+
+def _stream_boundary_shape(itemsize, nrhs):
+    """Planar shape whose 4-row ring is EXACTLY the budget (T far too
+    large for the resident scratch)."""
+    row_sites = LIMIT // (24 * itemsize * nrhs * STREAM_WINDOW_ROWS)
+    T, Z, Y = 64, 16, 8
+    Xh = row_sites // (Z * Y)
+    assert Z * Y * Xh == row_sites, (itemsize, nrhs)
+    shape = (T, Z, 24, Y, Xh)
+    return (nrhs, *shape) if nrhs > 1 else shape
+
+
+def _bump(shape, axis_from_t):
+    """Same shape with the (batched-aware) T or Z extent + 1 plane."""
+    lead = 1 if len(shape) == 6 else 0
+    i = lead + axis_from_t
+    return shape[:i] + (shape[i] + 1,) + shape[i + 1:]
+
+
+@pytest.mark.parametrize("nrhs", [1, 8])
+@pytest.mark.parametrize("dt", ["f32", "f64", "bf16"])
+def test_resident_boundary_exact_and_one_plane_over(dt, nrhs):
+    """At the budget: resident.  One t-plane over: the resident scratch
+    no longer fits but the ring trivially does -> stream."""
+    item = ITEMSIZE[dt]
+    shape = _resident_boundary_shape(item, nrhs)
+    assert item * math.prod(shape) == LIMIT
+    assert fused_dhat_fits(shape, DTYPE[dt])
+    assert fused_dhat_policy(shape, DTYPE[dt]) == "resident"
+
+    over = _bump(shape, 0)                      # one extra t-plane row
+    assert not fused_dhat_fits(over, DTYPE[dt])
+    assert fused_dhat_stream_fits(over, DTYPE[dt])
+    assert fused_dhat_policy(over, DTYPE[dt]) == "stream"
+
+
+@pytest.mark.parametrize("nrhs", [1, 8])
+@pytest.mark.parametrize("dt", ["f32", "f64", "bf16"])
+def test_stream_boundary_exact_and_one_plane_over(dt, nrhs):
+    """At the budget the ring fits -> stream; one z-plane over it cannot
+    (the ring holds full z-rows) -> the silent two-kernel fallback."""
+    item = ITEMSIZE[dt]
+    shape = _stream_boundary_shape(item, nrhs)
+    assert stream_ring_bytes(shape, DTYPE[dt]) == LIMIT
+    assert not fused_dhat_fits(shape, DTYPE[dt])
+    assert fused_dhat_policy(shape, DTYPE[dt]) == "stream"
+
+    over = _bump(shape, 1)                      # one extra z-plane
+    assert not fused_dhat_stream_fits(over, DTYPE[dt])
+    assert fused_dhat_policy(over, DTYPE[dt]) == "unfused"
+
+
+def test_ring_bytes_independent_of_t():
+    """The cap-lift itself: growing T leaves the ring untouched while the
+    resident scratch grows linearly."""
+    base = (8, 4, 24, 4, 4)
+    tall = (512, 4, 24, 4, 4)
+    assert stream_ring_bytes(base) == stream_ring_bytes(tall)
+    assert (4 * math.prod(tall)) == 64 * (4 * math.prod(base))
+    # Batched shapes scale the ring by nrhs, like the resident scratch.
+    assert stream_ring_bytes((8, *base)) == 8 * stream_ring_bytes(base)
+
+
+def test_acceptance_lattice_runs_streaming_policy():
+    """16x16x16x32 at nrhs=8, f32 — the ISSUE's canonical cap casualty:
+    the resident scratch (~50 MiB) fails, the ring is exactly 12 MiB."""
+    shape = (8, 16, 16, 24, 16, 16)             # planar, batched
+    assert not fused_dhat_fits(shape, jnp.float32)
+    assert stream_ring_bytes(shape, jnp.float32) == LIMIT
+    assert fused_dhat_policy(shape, jnp.float32) == "stream"
+    # ...and f64 doubles the ring past the budget -> unfused fallback.
+    assert fused_dhat_policy(shape, jnp.float64) == "unfused"
+
+
+def test_stream_traffic_model_accounts_overhead():
+    m = dhat_stream_traffic_model(16, 8, 8, 8, nrhs=2)
+    r = ws.hop_traffic_model(16, 8, 8, 8, nrhs=2)
+    assert m["recompute_rows"] == 2
+    assert m["window_rows"] == STREAM_WINDOW_ROWS
+    # Flops: two hopping blocks + 2 recomputed rows of the first + axpy.
+    assert m["flops"] > 2 * r["flops"]
+    assert m["flops"] < 2.2 * r["flops"]
+    # The ring is window/T of the resident scratch.
+    assert m["vmem_ring_bytes"] * 16 == m["vmem_resident_bytes"] * 4
+
+
+def _rand_planar(shape, seed=0, nrhs=None):
+    U = su3.random_gauge(jax.random.PRNGKey(seed), shape)
+    k = jax.random.PRNGKey(seed + 1)
+    bshape = (() if nrhs is None else (nrhs,)) + (*shape, 4, 3)
+    psi = (jax.random.normal(k, bshape)
+           + 1j * jax.random.normal(jax.random.fold_in(k, 1), bshape)
+           ).astype(jnp.complex64)
+    Ue, Uo = evenodd.pack_gauge(U)
+    if nrhs is None:
+        e, _ = evenodd.pack(psi)
+    else:
+        e, _ = jax.vmap(evenodd.pack)(psi)
+    return Ue, Uo, e
+
+
+def test_stream_kernel_matches_resident_and_unfused(small_eo):
+    """All three fused paths compute the same operator (forced
+    selection, planar in/out)."""
+    Ue, Uo, e, _, kappa = small_eo
+    Uep, Uop = ops.make_planar_fields(Ue, Uo)
+    ep = layout.spinor_to_planar(e)
+    outs = {f: ops.apply_dhat_planar_any(Uep, Uop, ep, kappa, fused=f,
+                                         interpret=True)
+            for f in ("resident", "stream", "unfused")}
+    np.testing.assert_allclose(np.asarray(outs["stream"]),
+                               np.asarray(outs["unfused"]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs["resident"]),
+                               np.asarray(outs["unfused"]), atol=1e-5)
+    # Booleans keep their legacy meaning.
+    np.testing.assert_array_equal(
+        np.asarray(ops.apply_dhat_planar_any(Uep, Uop, ep, kappa,
+                                             fused=True, interpret=True)),
+        np.asarray(outs["resident"]))
+    with pytest.raises(ValueError, match="fused="):
+        ops.apply_dhat_planar_any(Uep, Uop, ep, kappa, fused="bogus",
+                                  interpret=True)
+
+
+def test_auto_policy_routes_over_budget_lattice_to_stream(monkeypatch):
+    """A lattice that fails ``fused_dhat_fits`` must run the STREAMING
+    kernel under the auto policy (not the two-kernel fallback), and still
+    match the jnp reference — the cap-lift acceptance shape in miniature
+    (the budget is shrunk instead of the lattice grown; the policy reads
+    the live module constant).  T=8 > the 4-row window, so the ring is
+    strictly smaller than the resident scratch."""
+    Ue, Uo, e = _rand_planar((8, 2, 2, 4), seed=23)
+    kappa = KAPPA
+    ref = backends.make_wilson_ops("jnp", Ue, Uo)
+    Uep, Uop = ops.make_planar_fields(Ue, Uo)
+    ep = layout.spinor_to_planar(e)
+    # Budget below the resident scratch but above the 4-row ring.
+    resident = 4 * math.prod(ep.shape)
+    ring = stream_ring_bytes(ep.shape)
+    assert ring < resident
+    monkeypatch.setattr(ws, "_FUSED_SCRATCH_LIMIT_BYTES", ring)
+    assert fused_dhat_policy(ep.shape, ep.dtype) == "stream"
+
+    jaxpr = str(jax.make_jaxpr(
+        lambda v: ops.apply_dhat_planar_any(Uep, Uop, v, kappa,
+                                            interpret=True))(ep))
+    assert "wilson_dhat_fused_stream" in jaxpr
+    assert jaxpr.count("pallas_call") == 1
+
+    got = layout.spinor_from_planar(
+        ops.apply_dhat_planar_any(Uep, Uop, ep, kappa, interpret=True))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.apply_dhat(e, kappa)),
+                               atol=1e-5)
+
+
+def test_auto_policy_unfused_fallback_is_silent_correct(monkeypatch,
+                                                        small_eo):
+    """Below even the ring budget the auto policy must silently produce
+    the correct operator through the two-kernel path."""
+    Ue, Uo, e, _, kappa = small_eo
+    ref = backends.make_wilson_ops("jnp", Ue, Uo)
+    Uep, Uop = ops.make_planar_fields(Ue, Uo)
+    ep = layout.spinor_to_planar(e)
+    monkeypatch.setattr(ws, "_FUSED_SCRATCH_LIMIT_BYTES", 1)
+    assert fused_dhat_policy(ep.shape, ep.dtype) == "unfused"
+    got = layout.spinor_from_planar(
+        ops.apply_dhat_planar_any(Uep, Uop, ep, kappa, interpret=True))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.apply_dhat(e, kappa)),
+                               atol=1e-5)
+
+
+def test_stream_kernel_rejects_over_budget_ring_off_interpret():
+    """On real hardware an over-budget ring must fail loudly, before any
+    lowering (mirrors the resident kernel's guard)."""
+    Z, Y, Xh = 17, 32, 64                       # ring 4*Z*24*Y*Xh*4 > 12MiB
+    ep = jnp.zeros((8, Z, 24, Y, Xh), jnp.float32)
+    u = jnp.zeros((4, 8, Z, 18, Y, Xh), jnp.float32)
+    assert not fused_dhat_stream_fits(ep.shape)
+    with pytest.raises(ValueError, match="streaming Dhat ring"):
+        dhat_planar_fused_stream(u, u, ep, KAPPA, interpret=False)
+
+
+def test_stream_kernel_rejects_too_small_window(small_eo):
+    Ue, Uo, e, _, _ = small_eo
+    Uep, Uop = ops.make_planar_fields(Ue, Uo)
+    ep = layout.spinor_to_planar(e)
+    with pytest.raises(ValueError, match="stream window"):
+        dhat_planar_fused_stream(Uep, Uop, ep, KAPPA, window=3,
+                                 interpret=True)
+
+
+def test_stream_backend_registered_and_batched_single_kernel():
+    """pallas_fused_stream registers like any other backend; its batched
+    Dhat lowers to ONE pallas_call for the whole RHS block."""
+    assert "pallas_fused_stream" in backends.available_backends()
+    Ue, Uo, e = _rand_planar((4, 4, 4, 8), seed=3, nrhs=4)
+    bops = backends.make_wilson_ops("pallas_fused_stream", Ue, Uo,
+                                    interpret=True)
+    assert bops.domain == "planar"
+    v = bops.to_domain_batched(e)
+    txt = str(jax.make_jaxpr(
+        lambda w: bops.apply_dhat_native_batched(w, KAPPA))(v))
+    assert txt.count("pallas_call") == 1
+    assert "wilson_dhat_fused_stream" in txt
