@@ -22,7 +22,7 @@ import re
 import jax
 import jax.numpy as jnp
 
-from repro import backends
+from repro import api, backends
 from repro.core import evenodd, su3
 from repro.kernels import layout, ops
 from .common import Row, smoke, time_fn, write_json
@@ -184,8 +184,9 @@ def _dhat_streaming_rows() -> list:
     (T, Z, Y, X), nrhs = (((20, 8, 16, 16), 8) if smoke()
                           else ((16, 16, 16, 32), 8))
     Ue, Uo, _ = _rand_eo((T, Z, Y, X), seed=13)
-    bops = backends.make_wilson_ops(
-        "pallas_fused", Ue, Uo, **({} if on_tpu else {"interpret": True}))
+    bops = api.WilsonMatrix.bind(
+        Ue, Uo, kappa, backend=api.BackendSpec(
+            "pallas_fused", interpret=None if on_tpu else True)).ops
     ref = backends.make_wilson_ops("jnp", Ue, Uo)
     k = jax.random.PRNGKey(17)
     eb = (jax.random.normal(k, (nrhs, T, Z, Y, X // 2, 4, 3))
@@ -231,10 +232,12 @@ def _conversion_rows() -> list:
     Ue, Uo, e = _rand_eo(shape, seed=7)
     on_tpu = jax.default_backend() == "tpu"
 
-    cases = [("pallas_fused", {} if on_tpu else {"interpret": True}),
-             ("distributed", {})]
-    for name, opts in cases:
-        bops = backends.make_wilson_ops(name, Ue, Uo, **opts)
+    cases = [("pallas_fused", None if on_tpu else True),
+             ("distributed", None)]
+    for name, interpret in cases:
+        bops = api.WilsonMatrix.bind(
+            Ue, Uo, kappa,
+            backend=api.BackendSpec(name, interpret=interpret)).ops
         v = bops.to_domain(e)
         complex_fn = lambda psi: bops.apply_dhat(psi, kappa)  # noqa: E731
         native_fn = lambda w: bops.apply_dhat_native(w, kappa)  # noqa: E731

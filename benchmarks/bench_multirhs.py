@@ -15,13 +15,22 @@ Three claims, each demonstrated with a machine-checkable row in
 3. **Mixed precision pays** — an ``inner_dtype=f32`` iterative-refinement
    solve reaches the f64 tolerance a pure-f64 solve reaches, with fewer
    f64 operator applications.
+4. **Session reuse pays** (``multirhs_session_reuse``) — N same-shape
+   solves through one :class:`repro.api.SolveSession` trace exactly
+   once; the steady-state wall time is the serving-loop number, the
+   first-solve time the cold-start one.
+
+Operator binds and solves go through the public API
+(:class:`repro.api.WilsonMatrix` / :class:`repro.api.SolveSession`);
+the mixed-precision row deliberately keeps the legacy
+``solve_wilson_eo`` shim so the deprecated surface stays exercised.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro import backends
+from repro import api, backends
 from repro.core import evenodd, solver, su3
 from repro.kernels import ops
 from repro.kernels.wilson_stencil import (dhat_stream_traffic_model,
@@ -57,9 +66,10 @@ def _amortization_rows(shape) -> list:
     T, Z, Y, X = shape
     on_tpu = jax.default_backend() == "tpu"
     mode = "tpu" if on_tpu else "interpret"
-    opts = {} if on_tpu else {"interpret": True}
     Ue, Uo, _, _ = _rand_eo(shape, seed=0)
-    bops = backends.make_wilson_ops("pallas_fused", Ue, Uo, **opts)
+    bops = api.WilsonMatrix.bind(
+        Ue, Uo, KAPPA, backend=api.BackendSpec(
+            "pallas_fused", interpret=None if on_tpu else True)).ops
 
     nrhs_list = (1, 2, 4) if smoke() else (1, 2, 4, 8)
     base_model = hop_traffic_model(T, Z, Y, X // 2, nrhs=1)
@@ -116,9 +126,11 @@ def _stream_rows(shape) -> list:
     T, Z, Y, X = shape
     on_tpu = jax.default_backend() == "tpu"
     mode = "tpu" if on_tpu else "interpret"
-    opts = {} if on_tpu else {"interpret": True}
     Ue, Uo, _, _ = _rand_eo(shape, seed=3)
-    bops = backends.make_wilson_ops("pallas_fused_stream", Ue, Uo, **opts)
+    bops = api.WilsonMatrix.bind(
+        Ue, Uo, KAPPA, backend=api.BackendSpec(
+            "pallas_fused_stream",
+            interpret=None if on_tpu else True)).ops
 
     for n in (1, 4) if smoke() else (1, 2, 4, 8):
         _, _, e, _ = _rand_eo(shape, seed=4, nrhs=n)
@@ -155,26 +167,64 @@ def _agreement_rows(shape) -> list:
     on_tpu = jax.default_backend() == "tpu"
     Ue, Uo, be, bo = _rand_eo(shape, seed=5, nrhs=nrhs)
     for name in backends.available_backends():
-        opts = ({} if on_tpu or not name.startswith("pallas")
-                else {"interpret": True})
-        bops = backends.make_wilson_ops(name, Ue, Uo, **opts)
-        xe_b, _, res_b = solver.solve_wilson_eo(
-            Ue, Uo, be, bo, KAPPA, method="bicgstab", tol=tol,
-            backend=bops)
+        interpret = (True if not on_tpu and name.startswith("pallas")
+                     else None)
+        matrix = api.WilsonMatrix.bind(
+            Ue, Uo, KAPPA,
+            backend=api.BackendSpec(name, interpret=interpret))
+        session = api.SolveSession(
+            matrix, api.SolveSpec(method="bicgstab", tol=tol))
+        xe_b, _, res_b = session.solve(be, bo)
         worst = 0.0
         for n in range(nrhs):
-            xe_1, _, _ = solver.solve_wilson_eo(
-                Ue, Uo, be[n], bo[n], KAPPA, method="bicgstab", tol=tol,
-                backend=bops)
+            # second key in the same session (single-RHS shape); the
+            # nrhs-1 later columns are cache hits
+            xe_1, _, _ = session.solve(be[n], bo[n])
             d = float(jnp.linalg.norm(xe_b[n] - xe_1)
                       / jnp.linalg.norm(xe_1))
             worst = max(worst, d)
         ok = worst <= 1e-5
         assert ok, f"{name}: batched deviates from sequential by {worst}"
+        st = session.stats()
+        assert st["traces"] == 2, st   # one per rhs-shape key
         rows.append((f"multirhs_batched_vs_sequential_{name}", 0.0,
                      f"nrhs={nrhs};max_col_rel_diff={worst:.2e};"
                      f"agree_1e5={str(ok).lower()};"
-                     f"iters={int(jnp.max(res_b.iterations))}"))
+                     f"iters={int(jnp.max(res_b.iterations))};"
+                     f"session_traces={st['traces']};"
+                     f"session_cache_hits={st['cache_hits']}"))
+    return rows
+
+
+def _session_reuse_rows(shape) -> list:
+    """The compiled-solve-cache claim as a row: N same-shape ``nrhs=4``
+    solves through ONE :class:`repro.api.SolveSession` trace exactly
+    once; first-solve (trace + compile) vs steady-state wall time."""
+    rows: list[Row] = []
+    nrhs = 4
+    on_tpu = jax.default_backend() == "tpu"
+    mode = "tpu" if on_tpu else "interpret"
+    Ue, Uo, _, _ = _rand_eo(shape, seed=21)
+    matrix = api.WilsonMatrix.bind(
+        Ue, Uo, KAPPA, backend=api.BackendSpec(
+            "pallas_fused", interpret=None if on_tpu else True))
+    session = api.SolveSession(
+        matrix, api.SolveSpec(method="bicgstab", tol=1e-5))
+    n_solves = 3 if smoke() else 5
+    for i in range(n_solves):
+        _, _, e, o = _rand_eo(shape, seed=30 + i, nrhs=nrhs)
+        session.solve(e, o)
+    st = session.stats()
+    assert st["traces"] == 1 and st["cache_hits"] == n_solves - 1, st
+    (krow,) = st["keys"].values()
+    first, steady = krow["first_solve_s"], krow["steady_state_s"]
+    rows.append(("multirhs_session_reuse", steady * 1e6,
+                 f"mode={mode};nrhs={nrhs};solves={n_solves};"
+                 f"first_solve_us={first * 1e6:.1f};"
+                 f"steady_state_us={steady * 1e6:.1f};"
+                 f"trace_count={st['traces']};"
+                 f"cache_hits={st['cache_hits']};"
+                 f"first_vs_steady={first / max(steady, 1e-12):.1f}x"))
     return rows
 
 
@@ -225,6 +275,7 @@ def run() -> list:
     rows = _amortization_rows(shape)
     rows.extend(_stream_rows(shape))
     rows.extend(_agreement_rows(shape))
+    rows.extend(_session_reuse_rows(shape))
     rows.extend(_mixed_precision_rows(shape))
     write_json("multirhs", rows)
     return rows

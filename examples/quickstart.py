@@ -8,12 +8,15 @@
    hopping blocks — exactly equal to the full operator.
 4. Run the Pallas TPU kernel (interpret mode on CPU) and check it against
    the pure-jnp oracle.
-5. Solve D_W xi = eta via the even-odd Schur system and verify.
+5. Bind the operator ONCE into the public API's WilsonMatrix, solve
+   D_W xi = eta through a SolveSession, and verify — a second solve
+   reuses the compiled Krylov loop (see the session stats).
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import evenodd, solver, su3, wilson
+from repro import api
+from repro.core import evenodd, su3, wilson
 from repro.kernels import layout, ops, ref
 
 
@@ -51,14 +54,28 @@ def main():
     print(f"   kernel vs oracle: max err "
           f"{float(jnp.max(jnp.abs(got - want))):.2e}")
 
-    print("5) solve D_W xi = eta (even-odd Schur, BiCGStab) ...")
-    xe, xo, res = solver.solve_wilson_eo(Ue, Uo, ee, eo, kappa,
-                                         method="bicgstab", tol=1e-6)
+    print("5) solve D_W xi = eta (public API: WilsonMatrix + "
+          "SolveSession, BiCGStab) ...")
+    D = api.WilsonMatrix.bind(Ue, Uo, kappa, backend="jnp")
+    session = api.SolveSession(D, api.SolveSpec(method="bicgstab",
+                                                tol=1e-6))
+    xe, xo, res = session.solve(ee, eo)
     xi = evenodd.unpack(xe, xo)
     rel = float(jnp.linalg.norm(eta - wilson.apply_wilson(U, xi, kappa))
                 / jnp.linalg.norm(eta))
     print(f"   {int(res.iterations)} iterations, "
           f"true relative residual {rel:.2e}")
+
+    print("   ... and a second same-shape solve reuses the compiled "
+          "Krylov loop:")
+    eta2 = (jax.random.normal(jax.random.PRNGKey(3), (T, Z, Y, X, 4, 3))
+            + 1j * jax.random.normal(jax.random.PRNGKey(4),
+                                     (T, Z, Y, X, 4, 3))
+            ).astype(jnp.complex64)
+    session.solve(*evenodd.pack(eta2))
+    st = session.stats()
+    print(f"   session stats: solves={st['solves']} "
+          f"traces={st['traces']} cache_hits={st['cache_hits']}")
     print("done.")
 
 

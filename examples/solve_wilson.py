@@ -5,6 +5,11 @@ solve iterates in the chosen backend's *native* vector domain (complex
 for jnp, planar for the Pallas kernels, sharded planar for distributed)
 with encode/decode only at solve entry/exit.
 
+The driver is built on :mod:`repro.api`: each ``solve.main`` run binds
+the gauge once into a ``WilsonMatrix`` and pushes every solve through
+one ``SolveSession``, so the per-run session report at the end of each
+block shows the compiled-solve cache at work (solves=N, traces=1).
+
   PYTHONPATH=src python examples/solve_wilson.py
 """
 import tempfile
@@ -36,6 +41,10 @@ def main():
           "iterative-refinement loop to 1e-10 ===")
     solve.main(["--lattice", "wilson-8x8x8x8", "--tol", "1e-10",
                 "--n-solves", "1", "--inner-dtype", "f32"])
+    print("\n=== plain CG on the normal equations (--method cg, the "
+          "choice list is derived from SolveSpec.METHODS) ===")
+    solve.main(["--lattice", "wilson-8x8x8x8", "--tol", "1e-5",
+                "--n-solves", "1", "--method", "cg"])
 
 
 if __name__ == "__main__":

@@ -1,0 +1,52 @@
+"""``repro.api`` — the stable public surface of the reproduction.
+
+The paper's A64FX lesson is that layout packing and data placement must
+happen *once*, outside the hot loop; this package is that lesson as an
+API.  Three pieces:
+
+* **Specs** (:class:`LatticeSpec`, :class:`BackendSpec`,
+  :class:`SolveSpec`) — frozen, validated configuration objects shared
+  by Python callers and the CLI, replacing the old ~10-kwarg sprawl.
+  :class:`BackendSpec` validates against the registry's per-backend
+  capability metadata (:func:`repro.backends.backend_info`).
+* **:class:`WilsonMatrix`** — binds ``(gauge, kappa, BackendSpec)``
+  once (layout conversion, sharding placement, policy selection at
+  construction), registered as a JAX pytree (gauge planes are leaves,
+  specs are static aux), so ``D(psi)`` / ``D.dagger(psi)`` /
+  ``D.normal(psi)`` compose under ``jit``/``vmap`` and solves close
+  over it without retracing.
+* **:class:`SolveSession`** — a :class:`WilsonMatrix` plus a cache of
+  jitted solve executables keyed on ``(SolveSpec, rhs shape/dtype)``:
+  the second and every later same-shape solve skips tracing entirely.
+  ``session.stats()`` reports traces / cache hits / per-key timings.
+
+One-shot convenience::
+
+    from repro import api
+    xe, xo, res = api.solve(U_e, U_o, eta_e, eta_o, kappa=0.13,
+                            backend=api.BackendSpec("pallas_fused"),
+                            spec=api.SolveSpec(method="bicgstab"))
+
+The legacy ``repro.core.solver.solve_wilson_eo`` survives as a thin
+deprecation shim over exactly this path (removal horizon: two PRs
+after this package's introduction).
+"""
+from __future__ import annotations
+
+from .matrix import WilsonMatrix
+from .session import SolveSession
+from .specs import BackendSpec, LatticeSpec, SolveSpec
+
+__all__ = ["LatticeSpec", "BackendSpec", "SolveSpec", "WilsonMatrix",
+           "SolveSession", "solve"]
+
+
+def solve(U_e, U_o, eta_e, eta_o, kappa, *, backend="auto",
+          spec: SolveSpec = None, **bind_opts):
+    """One-shot convenience: bind a :class:`WilsonMatrix`, run a single
+    :class:`SolveSession` solve, throw both away.  Callers solving more
+    than once should keep the matrix/session to reuse the compiled
+    solve (that is the point of this package)."""
+    matrix = WilsonMatrix.bind(U_e, U_o, kappa, backend=backend,
+                               **bind_opts)
+    return SolveSession(matrix).solve(eta_e, eta_o, spec)

@@ -1,0 +1,280 @@
+"""Bind-once Wilson operator object, registered as a JAX pytree.
+
+A :class:`WilsonMatrix` binds ``(gauge, kappa, BackendSpec)`` exactly
+once: layout conversion (complex -> planar re/im planes), sharding
+placement, and backend/policy selection all happen at construction, and
+every subsequent application reuses the bound state.  The pytree
+registration makes the *gauge arrays the leaves* and the specs/kappa
+static aux data, so
+
+* ``jax.jit(lambda D, psi: D(psi))`` compiles once per gauge
+  *shape+spec*, not per gauge *value* — a second same-shape matrix hits
+  the cache;
+* ``jax.tree_util.tree_flatten`` / ``tree_map`` work (the operators are
+  rebuilt from the mapped leaves on unflatten, via the backend's
+  registered native factory — no layout conversion happens again);
+* solves can close over a matrix (the :class:`~repro.api.SolveSession`
+  pattern) without retracing per call.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import backends
+from repro.kernels import layout
+
+from .specs import BackendSpec, LatticeSpec
+
+__all__ = ["WilsonMatrix"]
+
+
+class _Opaque:
+    """Identity-hashed wrapper for non-hashable bind kwargs (meshes,
+    partitions) carried through pytree aux data.  Two matrices bound
+    with separate opaque opts never share a jit cache entry — by
+    design: we cannot prove their unhashable knobs equal."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value):
+        self.value = value
+
+
+class WilsonMatrix:
+    """The even-odd preconditioned Wilson operator, bound to one gauge
+    configuration.
+
+    Construct with :meth:`bind` (from complex even/odd gauge halves and
+    a :class:`~repro.api.BackendSpec`) or wrap an existing
+    :class:`~repro.backends.WilsonOps` with :meth:`from_ops`.  Apply it
+    like a function::
+
+        D = WilsonMatrix.bind(U_e, U_o, kappa=0.13,
+                              backend=BackendSpec("pallas_fused"))
+        out  = D(psi_e)            # Dhat psi      (complex interface)
+        outd = D.dagger(psi_e)     # Dhat^dag psi
+        outn = D.normal(psi_e)     # Dhat^dag Dhat psi
+
+    Sources with a leading ``nrhs`` axis run the batched kernels.  The
+    native-domain boundary is exposed as :meth:`encode` / :meth:`decode`
+    / :meth:`apply_native` / :meth:`dagger_native` for callers that
+    iterate natively (the Krylov solvers do).
+    """
+
+    def __init__(self, gauge: Tuple, kappa: float, lattice: LatticeSpec,
+                 backend: BackendSpec, *, gauge_form: str = "complex",
+                 rebuild: str = "native", opaque=None, ops=None):
+        self._gauge = tuple(gauge)
+        self.kappa = float(kappa)
+        self.lattice = lattice
+        self.backend = backend
+        self._gauge_form = gauge_form
+        self._rebuild = rebuild
+        self._opaque = opaque
+        self._ops = ops
+        # Exact complex gauge halves as passed to bind/from_ops; NOT a
+        # pytree leaf (an unflattened matrix loses it and falls back to
+        # reconstructing from the — possibly dtype-rounded — leaves).
+        self._exact_gauge = None
+
+    # --- construction -------------------------------------------------
+
+    @classmethod
+    def bind(cls, U_e, U_o, kappa: float, backend="auto",
+             **bind_opts) -> "WilsonMatrix":
+        """Bind the named backend to complex even/odd gauge halves.
+
+        ``backend`` is a :class:`~repro.api.BackendSpec` or a registry
+        name; it is validated against the backend's capability metadata
+        here.  ``bind_opts`` are extra factory kwargs that cannot live
+        in the (hashable) spec — e.g. a ``mesh``/``partition`` for the
+        distributed backend.  All expensive bind-once work (layout
+        conversion, device placement) happens in this call.
+        """
+        spec = BackendSpec.coerce(backend).validated()
+        lattice = LatticeSpec.from_eo_gauge(U_e)
+        opts = {**spec.factory_opts(), **bind_opts}
+        gauge = backends.prepare_gauge(spec.name, U_e, U_o, **opts)
+        ops = backends.bind_native(spec.name, gauge, **opts)
+        caps = backends.backend_info(spec.name)
+        m = cls(gauge, kappa, lattice, spec,
+                gauge_form=caps.gauge_form, rebuild="native",
+                opaque=_Opaque(bind_opts) if bind_opts else None,
+                ops=ops)
+        # Keep the exact complex gauge for refined solves: the planar
+        # leaves are rounded to the compute dtype (bf16 leaves deviate
+        # by ~1e-3), so reconstructing the f64 reference operator from
+        # them would make the "true residual" target the wrong gauge.
+        m._exact_gauge = (U_e, U_o)
+        return m
+
+    @classmethod
+    def from_ops(cls, ops, kappa: float, gauge=None,
+                 backend: Optional[BackendSpec] = None) -> "WilsonMatrix":
+        """Wrap an already-bound :class:`~repro.backends.WilsonOps`.
+
+        ``gauge`` (the complex even/odd halves) becomes the pytree
+        leaves when given.  If ``ops.backend`` is a registered name the
+        matrix stays tree-transformable (operators are rebuilt through
+        the registry factory on unflatten); otherwise the bound ops ride
+        along as aux data and the leaves must not be substituted.
+        """
+        leaves = tuple(gauge) if gauge is not None else ()
+        lattice = (LatticeSpec.from_eo_gauge(leaves[0])
+                   if leaves else None)
+        spec = backend or BackendSpec(name=ops.backend)
+        try:
+            backends.backend_info(ops.backend)
+            rebuild = "factory" if leaves else "pinned"
+        except ValueError:
+            rebuild = "pinned"
+        m = cls(leaves, kappa, lattice, spec, gauge_form="complex",
+                rebuild=rebuild,
+                opaque=_Opaque(ops) if rebuild == "pinned" else None,
+                ops=ops)
+        if leaves:
+            m._exact_gauge = leaves
+        return m
+
+    # --- bound operators ----------------------------------------------
+
+    @property
+    def ops(self):
+        """The bound :class:`~repro.backends.WilsonOps` (rebuilt lazily
+        from the gauge leaves after a pytree unflatten)."""
+        if self._ops is None:
+            if self._rebuild == "native":
+                opts = {**self.backend.factory_opts(),
+                        **(self._opaque.value if self._opaque else {})}
+                # dtype is baked into prepared gauge leaves; rebinding
+                # must not try to re-convert.
+                self._ops = backends.bind_native(
+                    self.backend.name, self._gauge, **opts)
+            elif self._rebuild == "factory":
+                self._ops = backends.make_wilson_ops(
+                    self.backend.name, *self._gauge,
+                    **self.backend.factory_opts())
+            else:
+                raise ValueError(
+                    f"WilsonMatrix over unregistered backend "
+                    f"{self.backend.name!r} cannot rebuild its "
+                    "operators from substituted leaves")
+        return self._ops
+
+    @property
+    def domain(self) -> str:
+        return self.ops.domain
+
+    def _batched(self, psi) -> bool:
+        return psi.ndim == 7
+
+    # complex-spinor interface ------------------------------------------
+
+    def apply(self, psi):
+        """``Dhat psi`` on complex even-half spinors; a leading ``nrhs``
+        axis selects the batched kernels."""
+        return self._complex_op(psi, self.ops.apply_dhat_native,
+                                self.ops.apply_dhat_native_batched)
+
+    __call__ = apply
+
+    def dagger(self, psi):
+        """``Dhat^dag psi`` (gamma5-hermiticity adjoint)."""
+        return self._complex_op(psi, self.ops.apply_dhat_dagger_native,
+                                self.ops.apply_dhat_dagger_native_batched)
+
+    def normal(self, psi):
+        """``Dhat^dag Dhat psi`` — the normal-equations operator the
+        ``cg``/``cgnr`` methods iterate on."""
+        return self.dagger(self.apply(psi))
+
+    def _complex_op(self, psi, fn, fn_batched):
+        ops = self.ops
+        if self._batched(psi):
+            out = ops.from_domain_batched(
+                fn_batched(ops.to_domain_batched(psi), self.kappa))
+        else:
+            out = ops.from_domain(fn(ops.to_domain(psi), self.kappa))
+        return out.astype(psi.dtype) if hasattr(psi, "dtype") else out
+
+    # native-domain boundary --------------------------------------------
+
+    def encode(self, psi):
+        """Complex spinor -> native vector (batched by a leading axis)."""
+        return (self.ops.to_domain_batched(psi) if self._batched(psi)
+                else self.ops.to_domain(psi))
+
+    def decode(self, v, dtype=jnp.complex64):
+        """Native vector -> complex spinor."""
+        batched = v.ndim == (7 if self.ops.domain == "complex" else 6)
+        out = (self.ops.from_domain_batched(v) if batched
+               else self.ops.from_domain(v))
+        return out.astype(dtype)
+
+    def _native_batched(self, v) -> bool:
+        return v.ndim == (7 if self.ops.domain == "complex" else 6)
+
+    def apply_native(self, v):
+        fn = (self.ops.apply_dhat_native_batched
+              if self._native_batched(v) else self.ops.apply_dhat_native)
+        return fn(v, self.kappa)
+
+    def dagger_native(self, v):
+        fn = (self.ops.apply_dhat_dagger_native_batched
+              if self._native_batched(v)
+              else self.ops.apply_dhat_dagger_native)
+        return fn(v, self.kappa)
+
+    # refined solves need the complex gauge back ------------------------
+
+    def gauge_complex(self, dtype=jnp.complex128):
+        """The complex even/odd gauge halves: the exact arrays the
+        matrix was bound from when available, else reconstructed from
+        the bound leaves.  The distinction matters for mixed-precision
+        refined solves — leaves are rounded to the compute dtype (bf16
+        planes deviate from the true gauge by ~1e-3), and the f64
+        reference operator must target the *true* gauge, not the
+        rounded one."""
+        if self._exact_gauge is not None:
+            U_e, U_o = self._exact_gauge
+            return U_e.astype(dtype), U_o.astype(dtype)
+        if not self._gauge:
+            raise ValueError(
+                "this WilsonMatrix was wrapped from bare ops without "
+                "gauge arrays; pass gauge=(U_e, U_o) to from_ops (or "
+                "use WilsonMatrix.bind) to enable refined solves")
+        if self._gauge_form == "complex":
+            U_e, U_o = self._gauge
+            return U_e.astype(dtype), U_o.astype(dtype)
+        u_e_p, u_o_p = self._gauge
+        return (layout.gauge_from_planar(u_e_p, dtype),
+                layout.gauge_from_planar(u_o_p, dtype))
+
+    # --- pytree protocol ----------------------------------------------
+
+    def tree_flatten(self):
+        aux = (self.kappa, self.lattice, self.backend, self._gauge_form,
+               self._rebuild, self._opaque)
+        return self._gauge, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        kappa, lattice, backend, gauge_form, rebuild, opaque = aux
+        ops = opaque.value if rebuild == "pinned" and opaque else None
+        return cls(tuple(leaves), kappa, lattice, backend,
+                   gauge_form=gauge_form, rebuild=rebuild, opaque=opaque,
+                   ops=ops)
+
+    def __repr__(self):
+        lat = self.lattice.extents if self.lattice else None
+        return (f"WilsonMatrix(backend={self.backend.name!r}, "
+                f"kappa={self.kappa}, lattice={lat})")
+
+
+jax.tree_util.register_pytree_node(
+    WilsonMatrix,
+    lambda m: m.tree_flatten(),
+    WilsonMatrix.tree_unflatten)

@@ -1,0 +1,283 @@
+"""Validated spec dataclasses — the public configuration surface.
+
+Three frozen (hashable) dataclasses replace the ~10-kwarg sprawl that
+the CLI, examples, and benchmarks each used to hand-wire into
+``solve_wilson_eo``:
+
+* :class:`LatticeSpec`   — the lattice geometry (extents, even-odd
+  half-extent) and the shapes derived from it;
+* :class:`BackendSpec`   — which operator backend, at which compute
+  dtype, with which knobs — validated against the registry's
+  per-backend :class:`~repro.backends.BackendCapabilities`;
+* :class:`SolveSpec`     — the Krylov configuration (method, tolerance,
+  batching, mixed-precision refinement).
+
+Being frozen and hashable, the specs double as cache keys: a
+:class:`~repro.api.SolveSession` keys its compiled solves on
+``(SolveSpec, rhs shape/dtype)``, and a :class:`~repro.api.WilsonMatrix`
+carries its ``LatticeSpec``/``BackendSpec`` as static pytree aux data,
+so two same-shape matrices hit the same jit cache entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro import backends
+from repro.core import solver as _solver
+
+__all__ = ["LatticeSpec", "BackendSpec", "SolveSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LatticeSpec:
+    """Lattice geometry: full extents ``(T, Z, Y, X)``.
+
+    The even-odd layout packs x in half (``Xh = X // 2``); all public
+    arrays are shaped from these extents, so the spec is the single
+    source for shape validation (see :meth:`spinor_eo_shape`).
+    """
+
+    extents: Tuple[int, int, int, int]
+
+    def __post_init__(self):
+        ext = tuple(int(e) for e in self.extents)
+        object.__setattr__(self, "extents", ext)
+        if len(ext) != 4 or any(e <= 0 for e in ext):
+            raise ValueError(
+                f"LatticeSpec.extents must be 4 positive ints (T, Z, Y, "
+                f"X); got {self.extents!r}")
+        if ext[3] % 2:
+            raise ValueError(
+                f"X extent must be even for the even-odd packing; got "
+                f"X={ext[3]}")
+
+    @property
+    def T(self):
+        return self.extents[0]
+
+    @property
+    def Z(self):
+        return self.extents[1]
+
+    @property
+    def Y(self):
+        return self.extents[2]
+
+    @property
+    def X(self):
+        return self.extents[3]
+
+    @property
+    def Xh(self):
+        """Packed (even-odd) x half-extent."""
+        return self.extents[3] // 2
+
+    @property
+    def volume(self):
+        T, Z, Y, X = self.extents
+        return T * Z * Y * X
+
+    @classmethod
+    def from_eo_gauge(cls, U_e) -> "LatticeSpec":
+        """Infer the spec from an even-half gauge field
+        ``(4, T, Z, Y, Xh, 3, 3)``."""
+        if U_e.ndim != 7 or U_e.shape[0] != 4 or U_e.shape[-2:] != (3, 3):
+            raise ValueError(
+                f"expected even-odd gauge half (4, T, Z, Y, Xh, 3, 3); "
+                f"got shape {U_e.shape}")
+        T, Z, Y, Xh = U_e.shape[1:5]
+        return cls((T, Z, Y, 2 * Xh))
+
+    def spinor_eo_shape(self, nrhs: Optional[int] = None):
+        """Shape of one even/odd spinor half; with ``nrhs`` a leading
+        RHS batch axis is prepended."""
+        base = (self.T, self.Z, self.Y, self.Xh, 4, 3)
+        return base if nrhs is None else (int(nrhs),) + base
+
+
+_DTYPE_ALIASES = {
+    "f32": "f32", "float32": "f32",
+    "bf16": "bf16", "bfloat16": "bf16",
+    "f64": "f64", "float64": "f64",
+}
+_DTYPE_JNP = {"f32": jnp.float32, "bf16": jnp.bfloat16, "f64": jnp.float64}
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Which operator backend to bind, and how.
+
+    ``name`` is a registry name (:func:`repro.backends.available_backends`)
+    or ``"auto"`` (``pallas_fused`` on TPU, ``jnp`` elsewhere);
+    ``dtype`` the planar compute dtype (``"f32"``/``"bf16"``/``"f64"``)
+    for backends that take one; ``interpret`` forces/disables the Pallas
+    interpreter (``None`` = auto off-TPU); ``opts`` is a tuple of extra
+    ``(key, value)`` pairs forwarded verbatim to the factory (values
+    must be hashable — the spec is jit-cache aux data).
+
+    :meth:`validated` resolves ``"auto"`` and checks every knob against
+    the backend's registered :class:`~repro.backends.BackendCapabilities`,
+    so a bad combination fails at spec time with the capability listing
+    in the error, not deep inside a bind.
+    """
+
+    name: str = "auto"
+    dtype: Optional[str] = None
+    interpret: Optional[bool] = None
+    opts: Tuple[Tuple[str, object], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "opts", tuple(
+            (str(k), v) for k, v in self.opts))
+        if self.dtype is not None:
+            norm = _DTYPE_ALIASES.get(str(self.dtype).lower())
+            if norm is None:
+                raise ValueError(
+                    f"unknown compute dtype {self.dtype!r}; choose from "
+                    f"{sorted(set(_DTYPE_ALIASES.values()))}")
+            object.__setattr__(self, "dtype", norm)
+
+    @classmethod
+    def coerce(cls, value) -> "BackendSpec":
+        """Accept a BackendSpec, a registry name string, or None."""
+        if value is None:
+            return cls()
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            return cls(name=value)
+        raise TypeError(
+            f"backend must be a BackendSpec or a registry name string; "
+            f"got {type(value).__name__}")
+
+    def resolve_name(self) -> str:
+        if self.name != "auto":
+            return self.name
+        import jax
+        return "pallas_fused" if jax.default_backend() == "tpu" else "jnp"
+
+    def validated(self) -> "BackendSpec":
+        """Resolve ``"auto"`` and validate against the backend's
+        capability metadata; returns the concrete spec."""
+        name = self.resolve_name()
+        caps = backends.backend_info(name)   # raises with the listing
+        if self.dtype is not None and self.dtype not in caps.dtypes:
+            if not caps.dtypes:
+                raise ValueError(
+                    f"backend {name!r} takes no compute dtype (it "
+                    f"follows the gauge dtype); drop BackendSpec.dtype "
+                    f"[capabilities: {caps}]")
+            raise ValueError(
+                f"backend {name!r} does not support dtype "
+                f"{self.dtype!r}; supported: {caps.dtypes} "
+                f"[capabilities: {caps}]")
+        if self.interpret is not None and not caps.supports_interpret:
+            raise ValueError(
+                f"backend {name!r} has no interpret mode; drop "
+                f"BackendSpec.interpret [capabilities: {caps}]")
+        return dataclasses.replace(self, name=name)
+
+    @property
+    def capabilities(self) -> backends.BackendCapabilities:
+        return backends.backend_info(self.resolve_name())
+
+    def factory_opts(self) -> dict:
+        """The kwargs this spec hands the backend factory."""
+        out = dict(self.opts)
+        if self.dtype is not None:
+            out["dtype"] = _DTYPE_JNP[self.dtype]
+        if self.interpret is not None:
+            out["interpret"] = self.interpret
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveSpec:
+    """One Krylov solve configuration.
+
+    ``method`` comes from :data:`repro.core.solver.KRYLOV_METHODS` — the
+    CLI's ``--method`` choices are *derived* from that tuple through
+    this class, never duplicated.  ``nrhs`` is optional: ``None`` means
+    "infer from the source block" (a leading batch axis on the sources
+    selects the batched pipeline); when set, the sources are validated
+    against it.  ``inner_dtype`` switches to mixed-precision iterative
+    refinement (inner Krylov in that dtype, outer f64 true-residual loop
+    — needs jax x64).
+    """
+
+    METHODS = _solver.KRYLOV_METHODS
+
+    method: str = "cgnr"
+    tol: float = 1e-6
+    max_iters: int = 2000
+    recompute_every: int = 0
+    nrhs: Optional[int] = None
+    inner_dtype: Optional[str] = None
+    inner_tol: float = 1e-4
+    max_outer: int = 25
+
+    def __post_init__(self):
+        if self.method not in self.METHODS:
+            raise ValueError(
+                f"unknown method {self.method!r}; choose from "
+                f"{self.METHODS}")
+        if not (self.tol > 0):
+            raise ValueError(f"tol must be > 0; got {self.tol}")
+        if self.max_iters < 1:
+            raise ValueError(
+                f"max_iters must be >= 1; got {self.max_iters}")
+        if self.recompute_every < 0:
+            raise ValueError(
+                f"recompute_every must be >= 0 (0 = never); got "
+                f"{self.recompute_every}")
+        if self.nrhs is not None and self.nrhs < 1:
+            raise ValueError(f"nrhs must be >= 1; got {self.nrhs}")
+        if self.inner_dtype is not None:
+            # normalizes spelling and raises on unknown dtypes
+            _solver.resolve_inner_dtype(self.inner_dtype)
+        if not (self.inner_tol > 0):
+            raise ValueError(
+                f"inner_tol must be > 0; got {self.inner_tol}")
+        if self.max_outer < 1:
+            raise ValueError(
+                f"max_outer must be >= 1; got {self.max_outer}")
+
+    def validate_rhs(self, eta_e, eta_o, lattice: LatticeSpec) -> bool:
+        """Check a source pair against the lattice and ``nrhs``;
+        returns whether the solve is batched."""
+        if eta_e.shape != eta_o.shape:
+            raise ValueError(
+                f"even/odd sources disagree: {eta_e.shape} vs "
+                f"{eta_o.shape}")
+        batched = eta_e.ndim == 7
+        want = lattice.spinor_eo_shape(eta_e.shape[0] if batched
+                                       else None)
+        if eta_e.shape != want:
+            raise ValueError(
+                f"source shape {eta_e.shape} does not match lattice "
+                f"{lattice.extents} (expected {want}; a leading axis "
+                "would select the batched multi-RHS pipeline)")
+        got_nrhs = eta_e.shape[0] if batched else 1
+        if self.nrhs is not None and self.nrhs != got_nrhs:
+            raise ValueError(
+                f"SolveSpec.nrhs={self.nrhs} but the source block has "
+                f"nrhs={got_nrhs}")
+        return batched
+
+    def cache_token(self) -> str:
+        """Compact human-readable form used in session stats keys.
+
+        Covers every field (defaults elided where unambiguous) so two
+        distinct specs can never collide onto one stats row."""
+        parts = [self.method, f"tol{self.tol:g}", f"mi{self.max_iters}"]
+        if self.recompute_every:
+            parts.append(f"re{self.recompute_every}")
+        if self.nrhs is not None:
+            parts.append(f"nrhs{self.nrhs}")
+        if self.inner_dtype is not None:
+            parts.append(f"inner-{self.inner_dtype}"
+                         f"@{self.inner_tol:g}x{self.max_outer}")
+        return ":".join(parts)

@@ -55,8 +55,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict
 
-__all__ = ["WilsonOps", "register_backend", "get_backend",
-           "available_backends", "make_wilson_ops"]
+__all__ = ["WilsonOps", "BackendCapabilities", "register_backend",
+           "get_backend", "available_backends", "backend_info",
+           "make_wilson_ops", "prepare_gauge", "bind_native"]
 
 
 def _identity(v):
@@ -220,36 +221,138 @@ class WilsonOps:
             apply_dhat_dagger_native_batched=apply_dhat_dagger_batched)
 
 
-# name -> factory(U_e, U_o, **opts) -> WilsonOps
-_REGISTRY: Dict[str, Callable] = {}
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """Introspectable per-backend metadata on the registry.
+
+    Consumed by :class:`repro.api.BackendSpec` validation, the CLI's
+    ``--backend help`` listing, and :class:`repro.api.WilsonMatrix`
+    (which uses ``gauge_form`` to decide what the pytree gauge leaves
+    look like and how to rebuild operators from them).
+
+    * ``domain`` — the native vector domain (``"complex"`` / ``"planar"``
+      / ``"planar_sharded"``).
+    * ``gauge_form`` — layout of the bound gauge arrays the backend's
+      kernels actually read (``"complex"`` even/odd halves, or
+      ``"planar"`` re/im component planes, possibly mesh-placed).
+    * ``batched_kernels`` — True when the ``*_batched`` ops are genuinely
+      batched kernels (gauge loaded once per grid step / one halo
+      exchange per block) rather than the automatic ``jax.vmap``
+      fallback.
+    * ``dtypes`` — planar compute dtypes the factory's ``dtype=`` knob
+      accepts; empty means the backend has no dtype knob (it follows the
+      gauge dtype, like ``"jnp"``).
+    * ``supports_interpret`` — whether the factory takes ``interpret=``
+      (Pallas interpreter off-TPU).
+    * ``policies`` — the fused-Dhat execution paths the backend can take
+      per application (policy introspection; ``"auto"`` means it picks
+      among the others by VMEM footprint).
+    """
+
+    name: str
+    domain: str = "complex"
+    gauge_form: str = "complex"
+    batched_kernels: bool = False
+    dtypes: tuple = ()
+    supports_interpret: bool = False
+    policies: tuple = ()
+    description: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class _BackendEntry:
+    factory: Callable                    # (U_e, U_o, **opts) -> WilsonOps
+    capabilities: BackendCapabilities
+    # (gauge_leaves_tuple, **opts) -> WilsonOps, where the leaves are the
+    # backend's *bound* gauge arrays (``capabilities.gauge_form``) — the
+    # rebind path repro.api.WilsonMatrix uses so pytree-unflattened
+    # matrices (jit arguments, tree_map results) reconstruct their
+    # operators from leaves without re-doing layout conversion.
+    native_factory: Callable = None
+    # (U_e, U_o, **opts) -> gauge_leaves_tuple: the bind-once conversion
+    # (layout packing, sharding placement) split out of ``factory``.
+    prepare_gauge: Callable = None
+
+
+# name -> _BackendEntry
+_REGISTRY: Dict[str, _BackendEntry] = {}
+
+
+def _default_prepare(U_e, U_o, **_opts):
+    return (U_e, U_o)
 
 
 def register_backend(name: str, factory: Callable, *,
+                     capabilities: BackendCapabilities = None,
+                     native_factory: Callable = None,
+                     prepare_gauge: Callable = None,
                      overwrite: bool = False) -> None:
-    """Register ``factory(U_e, U_o, **opts) -> WilsonOps`` under ``name``."""
+    """Register ``factory(U_e, U_o, **opts) -> WilsonOps`` under ``name``.
+
+    ``capabilities`` (a :class:`BackendCapabilities`) is optional but
+    recommended; without it the backend is assumed legacy-style (complex
+    identity domain, no dtype/interpret knobs, vmap-batched).  The
+    optional ``prepare_gauge`` / ``native_factory`` pair splits the
+    factory into its bind-once gauge conversion and an operator build
+    from already-converted gauge; backends that omit them default to
+    complex gauge leaves rebuilt through ``factory`` itself, which keeps
+    plain third-party factories fully usable from :mod:`repro.api`.
+    """
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"backend {name!r} already registered "
                          "(pass overwrite=True to replace)")
-    _REGISTRY[name] = factory
+    caps = capabilities or BackendCapabilities(name=name)
+    _REGISTRY[name] = _BackendEntry(
+        factory=factory, capabilities=caps,
+        native_factory=native_factory or (
+            lambda gauge, **opts: factory(*gauge, **opts)),
+        prepare_gauge=prepare_gauge or _default_prepare)
 
 
 def available_backends():
+    """Registered backend names, **sorted** (stable across registration
+    order, so CLI choices / docs / cache keys don't depend on import
+    order)."""
     return sorted(_REGISTRY)
 
 
-def get_backend(name: str) -> Callable:
-    """Resolve a backend factory by name."""
+def _entry(name: str) -> _BackendEntry:
     try:
         return _REGISTRY[name]
     except KeyError:
         raise ValueError(
             f"unknown backend {name!r}; registered backends: "
-            f"{available_backends()}") from None
+            f"{available_backends()} (see backend_info(name) for "
+            "per-backend capabilities)") from None
+
+
+def get_backend(name: str) -> Callable:
+    """Resolve a backend factory by name."""
+    return _entry(name).factory
+
+
+def backend_info(name: str) -> BackendCapabilities:
+    """Capability metadata for a registered backend."""
+    return _entry(name).capabilities
 
 
 def make_wilson_ops(name: str, U_e, U_o, **opts) -> WilsonOps:
     """Bind the named backend to a gauge configuration."""
     return get_backend(name)(U_e, U_o, **opts)
+
+
+def prepare_gauge(name: str, U_e, U_o, **opts):
+    """Run the named backend's bind-once gauge conversion (layout
+    packing, sharding placement), returning the tuple of bound gauge
+    arrays — the pytree leaves of a :class:`repro.api.WilsonMatrix`."""
+    return tuple(_entry(name).prepare_gauge(U_e, U_o, **opts))
+
+
+def bind_native(name: str, gauge, **opts) -> WilsonOps:
+    """Build the named backend's operators from already-prepared gauge
+    arrays (the output of :func:`prepare_gauge`); no layout conversion
+    or placement happens here, so this is safe to call with tracers."""
+    return _entry(name).native_factory(tuple(gauge), **opts)
 
 
 # Built-in backends self-register on import.

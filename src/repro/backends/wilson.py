@@ -33,7 +33,7 @@ from repro import compat
 from repro.core import evenodd, gamma
 from repro.kernels import layout, ops
 
-from . import WilsonOps, register_backend
+from . import BackendCapabilities, WilsonOps, register_backend
 
 
 def _dagger_via_gamma5(apply_dhat):
@@ -70,15 +70,18 @@ def make_jnp_backend(U_e, U_o, **_unused) -> WilsonOps:
         domain="complex")
 
 
-def _make_pallas(U_e, U_o, *, fused,
-                 interpret: Optional[bool] = None,
-                 name: str, dtype=jnp.float32) -> WilsonOps:
+def _pallas_prepare_gauge(U_e, U_o, *, dtype=jnp.float32, **_unused):
+    """Bind-once layout conversion of the pallas-family backends."""
+    return ops.make_planar_fields(U_e, U_o, dtype=dtype)
+
+
+def _make_pallas_from_planar(u_e_p, u_o_p, *, fused,
+                             interpret: Optional[bool] = None,
+                             name: str) -> WilsonOps:
     # ``fused``: None (three-way auto policy), True/"resident",
     # "stream", or False/"unfused" — forwarded per call to
     # ops.apply_dhat_planar_any so the policy sees the actual
     # (possibly batched) vector shape.
-    u_e_p, u_o_p = ops.make_planar_fields(U_e, U_o, dtype=dtype)
-
     def to_domain(psi):
         return layout.spinor_to_planar(psi, dtype=u_e_p.dtype)
 
@@ -109,6 +112,23 @@ def _make_pallas(U_e, U_o, *, fused,
         to_domain_batched=to_domain, from_domain_batched=from_domain,
         hop_oe_batched=hop_oe, hop_eo_batched=hop_eo,
         apply_dhat_batched=apply_dhat, apply_dhat_dagger_batched=dagger)
+
+
+def _make_pallas(U_e, U_o, *, fused, interpret: Optional[bool] = None,
+                 name: str, dtype=jnp.float32) -> WilsonOps:
+    u_e_p, u_o_p = _pallas_prepare_gauge(U_e, U_o, dtype=dtype)
+    return _make_pallas_from_planar(u_e_p, u_o_p, fused=fused,
+                                    interpret=interpret, name=name)
+
+
+def _pallas_native_factory(fused, name):
+    """Rebind a pallas-family backend from already-planar gauge leaves
+    (``dtype`` is baked into the leaves, so it is accepted and ignored)."""
+    def native(gauge, *, interpret=None, dtype=None, **_unused):
+        del dtype
+        return _make_pallas_from_planar(*gauge, fused=fused,
+                                        interpret=interpret, name=name)
+    return native
 
 
 def make_pallas_backend(U_e, U_o, *, interpret=None, dtype=jnp.float32,
@@ -177,19 +197,66 @@ def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
     ``"jnp"`` (complex round-trip inside the shard, the old default) and
     ``"pallas"`` remain selectable.
     """
+    u_e_p, u_o_p = _distributed_prepare_gauge(
+        U_e, U_o, partition=partition, mesh=mesh,
+        local_backend=local_backend, overlap=overlap,
+        interpret=interpret, dtype=dtype)
+    return _make_distributed_from_planar(
+        u_e_p, u_o_p, partition=partition, mesh=mesh,
+        local_backend=local_backend, overlap=overlap, interpret=interpret)
+
+
+# A bind resolves its partition twice (prepare_gauge places the gauge,
+# the native factory builds the shard_map'd operators); memoize so both
+# get the SAME partition object and the mesh/sharding setup runs once.
+_PARTITION_MEMO = {}
+
+
+def _resolve_partition(partition, mesh, local_backend, overlap, interpret):
     from repro.distributed import qcd  # local import: shard_map machinery
 
-    if partition is None:
-        if mesh is None:
-            mesh = compat.make_mesh((jax.device_count(), 1),
-                                    ("data", "model"))
-        partition = qcd.QCDPartition.for_mesh(
-            mesh, backend=local_backend, overlap=overlap,
+    if partition is not None:
+        return partition
+    key = (mesh if mesh is not None else ("default", jax.device_count()),
+           local_backend, overlap, interpret)
+    if key not in _PARTITION_MEMO:
+        m = mesh
+        if m is None:
+            m = compat.make_mesh((jax.device_count(), 1),
+                                 ("data", "model"))
+        _PARTITION_MEMO[key] = qcd.QCDPartition.for_mesh(
+            m, backend=local_backend, overlap=overlap,
             interpret=interpret)
+    return _PARTITION_MEMO[key]
 
+
+def _distributed_prepare_gauge(U_e, U_o, *, partition=None, mesh=None,
+                               local_backend: str = "jnp_planar",
+                               overlap: str = "fused", interpret=None,
+                               dtype=jnp.float32, **_unused):
+    """Bind-once gauge work of the distributed backend: planarize AND
+    place on the device mesh."""
+    partition = _resolve_partition(partition, mesh, local_backend,
+                                   overlap, interpret)
     u_e_p, u_o_p = ops.make_planar_fields(U_e, U_o, dtype=dtype)
     u_e_p = jax.device_put(u_e_p, partition.gauge_sharding())
     u_o_p = jax.device_put(u_o_p, partition.gauge_sharding())
+    return u_e_p, u_o_p
+
+
+def _make_distributed_from_planar(u_e_p, u_o_p, *, partition=None,
+                                  mesh=None,
+                                  local_backend: str = "jnp_planar",
+                                  overlap: str = "fused",
+                                  interpret=None, dtype=None,
+                                  **_unused) -> WilsonOps:
+    """Operators from already-planarized-and-placed gauge fields (the
+    rebind path; no placement happens here)."""
+    del dtype  # baked into the planar leaves
+    from repro.distributed import qcd
+
+    partition = _resolve_partition(partition, mesh, local_backend,
+                                   overlap, interpret)
     sp_shard = partition.spinor_sharding()
     bsp_shard = partition.batched_spinor_sharding()
 
@@ -251,8 +318,62 @@ def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
             apply_dhat_batched))
 
 
-register_backend("jnp", make_jnp_backend)
-register_backend("pallas", make_pallas_backend)
-register_backend("pallas_fused", make_pallas_fused_backend)
-register_backend("pallas_fused_stream", make_pallas_fused_stream_backend)
-register_backend("distributed", make_distributed_backend)
+_PALLAS_DTYPES = ("f32", "bf16", "f64")
+
+register_backend(
+    "jnp", make_jnp_backend,
+    capabilities=BackendCapabilities(
+        name="jnp", domain="complex", gauge_form="complex",
+        batched_kernels=False, dtypes=(), supports_interpret=False,
+        policies=(),
+        description="pure-XLA complex reference path (compute dtype "
+                    "follows the gauge dtype; batched ops are a vmap "
+                    "fallback)"),
+    native_factory=lambda gauge, **opts: make_jnp_backend(*gauge),
+    prepare_gauge=lambda U_e, U_o, **_: (U_e, U_o))
+register_backend(
+    "pallas", make_pallas_backend,
+    capabilities=BackendCapabilities(
+        name="pallas", domain="planar", gauge_form="planar",
+        batched_kernels=True, dtypes=_PALLAS_DTYPES,
+        supports_interpret=True, policies=("unfused",),
+        description="planar Pallas stencil, one kernel per hopping "
+                    "block (two kernels per Dhat)"),
+    native_factory=_pallas_native_factory(False, "pallas"),
+    prepare_gauge=_pallas_prepare_gauge)
+register_backend(
+    "pallas_fused", make_pallas_fused_backend,
+    capabilities=BackendCapabilities(
+        name="pallas_fused", domain="planar", gauge_form="planar",
+        batched_kernels=True, dtypes=_PALLAS_DTYPES,
+        supports_interpret=True,
+        policies=("auto", "resident", "stream", "unfused"),
+        description="Dhat as ONE kernel; three-way auto policy sized by "
+                    "dtype and nrhs (resident VMEM scratch -> streaming "
+                    "plane window -> two-kernel fallback)"),
+    native_factory=_pallas_native_factory(None, "pallas_fused"),
+    prepare_gauge=_pallas_prepare_gauge)
+register_backend(
+    "pallas_fused_stream", make_pallas_fused_stream_backend,
+    capabilities=BackendCapabilities(
+        name="pallas_fused_stream", domain="planar", gauge_form="planar",
+        batched_kernels=True, dtypes=_PALLAS_DTYPES,
+        supports_interpret=True, policies=("stream",),
+        description="streaming plane-window fused Dhat, forced: VMEM "
+                    "holds a 4-row ring of odd-intermediate t-planes "
+                    "(no T-dependent volume cap)"),
+    native_factory=_pallas_native_factory("stream", "pallas_fused_stream"),
+    prepare_gauge=_pallas_prepare_gauge)
+register_backend(
+    "distributed", make_distributed_backend,
+    capabilities=BackendCapabilities(
+        name="distributed", domain="planar_sharded",
+        gauge_form="planar_sharded", batched_kernels=True,
+        dtypes=_PALLAS_DTYPES, supports_interpret=True,
+        policies=("local:jnp_planar", "local:jnp", "local:pallas"),
+        description="shard_map over a device mesh with z/t halo "
+                    "exchange; gauge placed once at bind, one batched "
+                    "exchange per RHS block"),
+    native_factory=lambda gauge, **opts: _make_distributed_from_planar(
+        *gauge, **opts),
+    prepare_gauge=_distributed_prepare_gauge)

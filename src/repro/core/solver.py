@@ -455,8 +455,26 @@ def bicgstab_batched(op: Callable, b, x0=None, *, tol: float = 1e-6,
     return SolveResult(x, iters, rel, rel <= tol)
 
 
+# Krylov methods valid on the (non-Hermitian) even-odd Schur system.
+# "cg" is plain CG run on the normal equations Dhat^dag Dhat x =
+# Dhat^dag rhs — the same system "cgnr" solves, minus cgnr's final
+# true-residual recomputation of the original system (one op + one
+# op_dag cheaper; its reported residual is the normal-equation one).
+# repro.api.SolveSpec derives its method choices (and the CLI's
+# --method list) from this tuple — extend HERE, not in the CLI.
+KRYLOV_METHODS = ("cg", "cgnr", "bicgstab")
+
+
 def _run_krylov(method: str, dhat, dhat_dag, rhs, *, tol, max_iters,
                 recompute_every, batched: bool = False):
+    if method == "cg":
+        fn = cg_batched if batched else cg
+
+        def normal(v):
+            return dhat_dag(dhat(v))
+
+        return fn(normal, dhat_dag(rhs), tol=tol, max_iters=max_iters,
+                  recompute_every=recompute_every)
     if method == "cgnr":
         fn = cgnr_batched if batched else cgnr
         return fn(dhat, dhat_dag, rhs, tol=tol, max_iters=max_iters,
@@ -465,7 +483,8 @@ def _run_krylov(method: str, dhat, dhat_dag, rhs, *, tol, max_iters,
         fn = bicgstab_batched if batched else bicgstab
         return fn(dhat, rhs, tol=tol, max_iters=max_iters,
                   recompute_every=recompute_every)
-    raise ValueError(f"unknown method {method!r}")
+    raise ValueError(
+        f"unknown method {method!r}; choose from {KRYLOV_METHODS}")
 
 
 _INNER_DTYPES = {
@@ -487,6 +506,65 @@ def resolve_inner_dtype(inner_dtype):
     return jnp.dtype(inner_dtype).type
 
 
+def make_native_solve(bops, kappa, *, method: str = "cgnr",
+                      tol: float = 1e-6, max_iters: int = 2000,
+                      recompute_every: int = 0, batched: bool = False):
+    """Build the native-domain Schur-solve pipeline for a bound operator.
+
+    Returns ``fn(v_e, v_o) -> (x, v_xi_o, SolveResult)`` working entirely
+    on native vectors of ``bops`` (no encode/decode, no placement): the
+    Eq. (4) RHS build, the Krylov iteration, and the Eq. (5) odd
+    reconstruction.  The returned function is side-effect free and
+    jit-compatible — :class:`repro.api.SolveSession` wraps it in ``jax.jit``
+    once per ``(SolveSpec, rhs shape)`` key, which is what makes the
+    second and every later same-shape solve skip tracing entirely.
+    """
+    if batched:
+        hop_eo_nat = bops.hop_eo_native_batched
+        hop_oe_nat = bops.hop_oe_native_batched
+        dhat_nat = bops.apply_dhat_native_batched
+        dhat_dag_nat = bops.apply_dhat_dagger_native_batched
+    else:
+        hop_eo_nat, hop_oe_nat = bops.hop_eo_native, bops.hop_oe_native
+        dhat_nat = bops.apply_dhat_native
+        dhat_dag_nat = bops.apply_dhat_dagger_native
+
+    def solve_native(v_e, v_o):
+        # RHS of Eq. (4): eta_e + kappa * H_eo eta_o  (D_eo = -kappa H_eo).
+        rhs = _axpy(kappa, hop_eo_nat(v_o), v_e)
+        res = _run_krylov(
+            method,
+            lambda v: dhat_nat(v, kappa),
+            lambda v: dhat_dag_nat(v, kappa),
+            rhs, tol=tol, max_iters=max_iters,
+            recompute_every=recompute_every, batched=batched)
+        # Eq. (5): xi_o = eta_o + kappa * H_oe xi_e.
+        v_xi_o = _axpy(kappa, hop_oe_nat(res.x), v_o)
+        return res.x, v_xi_o, res
+
+    return solve_native
+
+
+# The one-shot-session shim warns once per process, not once per call
+# site: the legacy entry point is exercised hundreds of times by the
+# deprecation-guard tests and benches.
+_DEPRECATION_WARNED = False
+
+
+def _warn_deprecated():
+    global _DEPRECATION_WARNED
+    if _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED = True
+    import warnings
+    warnings.warn(
+        "solve_wilson_eo is deprecated and will be removed two PRs "
+        "after the repro.api introduction: bind the gauge once with "
+        "repro.api.WilsonMatrix and solve through repro.api.SolveSession "
+        "(see README 'Public API' for the kwarg -> spec migration table)",
+        DeprecationWarning, stacklevel=3)
+
+
 def solve_wilson_eo(U_e, U_o, eta_e, eta_o, kappa, *, method: str = "cgnr",
                     tol: float = 1e-6, max_iters: int = 2000,
                     recompute_every: int = 0, config: SolverConfig = None,
@@ -496,6 +574,20 @@ def solve_wilson_eo(U_e, U_o, eta_e, eta_o, kappa, *, method: str = "cgnr",
                     hop_oe_fn=None, hop_eo_fn=None,
                     backend=None, backend_opts=None):
     """Solve ``D_W xi = eta`` via the even-odd Schur system (Eqs. 4-5).
+
+    .. deprecated::
+        This kwarg-sprawl entry point is now a thin shim over the public
+        object API — it builds a one-shot
+        :class:`repro.api.WilsonMatrix` + :class:`repro.api.SolveSession`
+        per call, re-binding the backend (re-planarizing/re-placing the
+        gauge) every time.  Callers solving repeatedly should bind once
+        and reuse the session, which also caches the compiled solve per
+        ``(SolveSpec, rhs shape)``.  Emits a ``DeprecationWarning`` once
+        per process; removal horizon: two PRs after the ``repro.api``
+        introduction (see README "Public API" for the migration table).
+
+    ``method`` is one of :data:`KRYLOV_METHODS` (``"cg"`` = CG on the
+    normal equations without cgnr's extra true-residual pass).
 
     Returns ``(xi_e, xi_o, SolveResult)``.  For the Wilson matrix
     ``D_ee = D_oo = 1`` so the reconstruction is Eq. (5) with trivial
@@ -537,6 +629,8 @@ def solve_wilson_eo(U_e, U_o, eta_e, eta_o, kappa, *, method: str = "cgnr",
     """
     from . import evenodd  # local import to avoid cycle
     from repro import backends as backends_lib  # avoid import cycle
+
+    _warn_deprecated()
 
     if config is not None:
         tol, max_iters = config.tol, config.max_iters
@@ -594,53 +688,43 @@ def solve_wilson_eo(U_e, U_o, eta_e, eta_o, kappa, *, method: str = "cgnr",
             apply_dhat=lambda v, _k: dhat(v),
             apply_dhat_dagger=lambda v, _k: dhat_dag(v))
 
-    if batched:
-        to_dom, from_dom = bops.to_domain_batched, bops.from_domain_batched
-        hop_eo_nat, hop_oe_nat = (bops.hop_eo_native_batched,
-                                  bops.hop_oe_native_batched)
-        dhat_nat = bops.apply_dhat_native_batched
-        dhat_dag_nat = bops.apply_dhat_dagger_native_batched
-    else:
-        to_dom, from_dom = bops.to_domain, bops.from_domain
-        hop_eo_nat, hop_oe_nat = bops.hop_eo_native, bops.hop_oe_native
-        dhat_nat = bops.apply_dhat_native
-        dhat_dag_nat = bops.apply_dhat_dagger_native
+    # Thin shim over the public API: wrap the bound ops in a one-shot
+    # WilsonMatrix + SolveSession, so both the legacy kwarg surface and
+    # repro.api run the exact same pipeline (encode once, jitted native
+    # Krylov iteration, decode once).
+    from repro import api  # local import: api sits above core
 
-    # Encode once, iterate in the backend's native domain, decode once.
-    v_e, v_o = to_dom(eta_e), to_dom(eta_o)
-    # RHS of Eq. (4): eta_e + kappa * H_eo eta_o  (D_eo = -kappa H_eo).
-    rhs = _axpy(kappa, hop_eo_nat(v_o), v_e)
-    res = _run_krylov(
-        method,
-        lambda v: dhat_nat(v, kappa),
-        lambda v: dhat_dag_nat(v, kappa),
-        rhs, tol=tol, max_iters=max_iters,
-        recompute_every=recompute_every, batched=batched)
-    # Eq. (5): xi_o = eta_o + kappa * H_oe xi_e.
-    v_xi_o = _axpy(kappa, hop_oe_nat(res.x), v_o)
-    # Decode keeps the callers' spinor dtype (complex128 under x64).
-    xi_e = from_dom(res.x).astype(eta_e.dtype)
-    xi_o = from_dom(v_xi_o).astype(eta_o.dtype)
-    return xi_e, xi_o, res._replace(x=xi_e)
+    matrix = api.WilsonMatrix.from_ops(bops, kappa, gauge=(U_e, U_o))
+    spec = api.SolveSpec(method=method, tol=tol, max_iters=max_iters,
+                         recompute_every=recompute_every)
+    return api.SolveSession(matrix).solve(eta_e, eta_o, spec)
 
 
-def _solve_wilson_eo_refined(U_e, U_o, eta_e, eta_o, kappa, *, method,
-                             tol, max_iters, recompute_every, inner_dtype,
-                             inner_tol, max_outer, batched,
-                             backend, backend_opts):
-    """Mixed-precision iterative refinement on the Schur system.
+def make_refined_solve(bops, U64_e, U64_o, kappa, *, method: str = "cgnr",
+                       tol: float = 1e-10, max_iters: int = 2000,
+                       recompute_every: int = 0, inner_tol: float = 1e-4,
+                       max_outer: int = 25, batched: bool = False):
+    """Build a reusable mixed-precision iterative-refinement solve.
 
-    Outer loop (Python-level; a handful of passes): f64 true residual of
-    ``Dhat x = rhs``, then a correction solve ``Dhat e = r`` in the cheap
-    inner dtype through the chosen backend's native domain, ``x += e``,
-    until the **f64** relative residual meets ``tol``.  The f64 operator
-    (pure-XLA complex128 reference path) is applied exactly once per
-    outer pass — versus ~2 per Krylov iteration for a pure-f64 solve —
-    and all the bandwidth-hungry iterating happens at half (or quarter,
-    bf16) the f64 memory traffic.
+    ``bops`` is the *inner* backend, already bound at the cheap inner
+    dtype; ``U64_e`` / ``U64_o`` is the gauge for the f64 reference
+    operator (upcast to complex128 here).  The f64 operator and hops are
+    jitted **once at build time**, so a caller holding the returned
+    ``fn(eta_e, eta_o) -> (xi_e, xi_o, RefinedResult)`` (e.g. a
+    :class:`repro.api.SolveSession` cache entry) pays the f64 traces on
+    the first solve only.  The outer loop itself is Python-level — a
+    handful of passes with data-dependent exit — so it is rebuilt per
+    call by design; the expensive pieces (f64 operator, inner Krylov
+    ``while_loop``) reuse their jit caches across calls.
+
+    Outer loop: f64 true residual of ``Dhat x = rhs``, then a correction
+    solve ``Dhat e = r`` in the inner dtype through ``bops``'s native
+    domain, ``x += e``, until the **f64** relative residual meets
+    ``tol``.  The f64 operator is applied once per outer pass — versus
+    ~2 per Krylov iteration for a pure-f64 solve — and all the
+    bandwidth-hungry iterating happens at the inner dtype's traffic.
     """
     from . import evenodd
-    from repro import backends as backends_lib
 
     if jnp.zeros((), jnp.float64).dtype != jnp.dtype(jnp.float64):
         raise ValueError(
@@ -648,11 +732,8 @@ def _solve_wilson_eo_refined(U_e, U_o, eta_e, eta_o, kappa, *, method,
             "residual: enable x64 (jax.config.update('jax_enable_x64', "
             "True) or the jax.experimental.enable_x64 context)")
 
-    idt = resolve_inner_dtype(inner_dtype)
-
-    # f64 reference operator (pure XLA, complex128).
-    U64_e = U_e.astype(jnp.complex128)
-    U64_o = U_o.astype(jnp.complex128)
+    U64_e = U64_e.astype(jnp.complex128)
+    U64_o = U64_o.astype(jnp.complex128)
 
     def _maybe_vmap(fn):
         return jax.vmap(fn) if batched else fn
@@ -664,26 +745,6 @@ def _solve_wilson_eo_refined(U_e, U_o, eta_e, eta_o, kappa, *, method,
     hop_oe64 = jax.jit(_maybe_vmap(
         lambda v: evenodd.hop_oe(U64_e, U64_o, v)))
 
-    # Inner backend at the inner dtype: planar backends re-planarize the
-    # gauge once at that dtype; the jnp backend has no planar dtype, so
-    # its gauge is downcast to complex64 here — otherwise a complex128
-    # gauge would promote every inner iteration back to f64 arithmetic
-    # and the refinement would save nothing.  (bf16 has no complex
-    # counterpart: through jnp the inner solve runs at f32.)
-    if backend is None:
-        backend = "jnp"
-    if isinstance(backend, backends_lib.WilsonOps):
-        bops = backend
-    else:
-        opts = dict(backend_opts or {})
-        if backend == "jnp":
-            bops = backends_lib.make_wilson_ops(
-                backend, U_e.astype(jnp.complex64),
-                U_o.astype(jnp.complex64), **opts)
-        else:
-            opts.setdefault("dtype", idt)
-            bops = backends_lib.make_wilson_ops(backend, U_e, U_o, **opts)
-
     if batched:
         to_dom, from_dom = bops.to_domain_batched, bops.from_domain_batched
         dhat_nat = bops.apply_dhat_native_batched
@@ -693,50 +754,98 @@ def _solve_wilson_eo_refined(U_e, U_o, eta_e, eta_o, kappa, *, method,
         dhat_nat = bops.apply_dhat_native
         dhat_dag_nat = bops.apply_dhat_dagger_native
 
-    eta64_e = eta_e.astype(jnp.complex128)
-    eta64_o = eta_o.astype(jnp.complex128)
-    rhs64 = eta64_e + kappa * hop_eo64(eta64_o)
-    f64_applies = 1  # the hop above
     bnorm = _bnorm2 if batched else _norm2
-    b2 = bnorm(rhs64)
 
-    x64 = jnp.zeros_like(rhs64)
-    inner_iters = 0
-    # Per-column (batched) / scalar (unbatched) total inner iterations,
-    # matching the batched SolveResult contract RefinedResult duck-types.
-    iters_acc = jnp.zeros(b2.shape, jnp.int32)
-    outer = 0
-    rel = None
-    for outer in range(1, max_outer + 1):
-        r64 = rhs64 - dhat64(x64)
-        f64_applies += 1
-        rel = jnp.sqrt(bnorm(r64) / jnp.maximum(b2, 1e-300))
-        if bool(jnp.all(rel <= tol)):
-            break
-        # Correction solve in the inner dtype, native domain.
-        v = to_dom(r64.astype(jnp.complex64))
-        res = _run_krylov(
-            method,
-            lambda w: dhat_nat(w, kappa),
-            lambda w: dhat_dag_nat(w, kappa),
-            v, tol=inner_tol, max_iters=max_iters,
-            recompute_every=recompute_every, batched=batched)
-        x64 = x64 + from_dom(res.x).astype(jnp.complex128)
-        iters_acc = iters_acc + res.iterations.astype(jnp.int32)
-        inner_iters += int(jnp.max(res.iterations))
-    else:
-        # Outer budget exhausted: report the residual of the final
-        # iterate, not the one from before the last correction.
-        r64 = rhs64 - dhat64(x64)
-        f64_applies += 1
-        rel = jnp.sqrt(bnorm(r64) / jnp.maximum(b2, 1e-300))
-    converged = rel <= tol
+    def refined(eta_e, eta_o):
+        eta64_e = eta_e.astype(jnp.complex128)
+        eta64_o = eta_o.astype(jnp.complex128)
+        rhs64 = eta64_e + kappa * hop_eo64(eta64_o)
+        f64_applies = 1  # the hop above
+        b2 = bnorm(rhs64)
 
-    xi_o64 = eta64_o + kappa * hop_oe64(x64)
-    f64_applies += 1
-    xi_e = x64.astype(eta_e.dtype)
-    xi_o = xi_o64.astype(eta_o.dtype)
-    return xi_e, xi_o, RefinedResult(
-        x=xi_e, iterations=iters_acc, residual=rel, converged=converged,
-        outer_iterations=outer, f64_applies=f64_applies,
-        inner_iterations=inner_iters)
+        x64 = jnp.zeros_like(rhs64)
+        inner_iters = 0
+        # Per-column (batched) / scalar (unbatched) total inner
+        # iterations, matching the batched SolveResult contract
+        # RefinedResult duck-types.
+        iters_acc = jnp.zeros(b2.shape, jnp.int32)
+        outer = 0
+        rel = None
+        for outer in range(1, max_outer + 1):
+            r64 = rhs64 - dhat64(x64)
+            f64_applies += 1
+            rel = jnp.sqrt(bnorm(r64) / jnp.maximum(b2, 1e-300))
+            if bool(jnp.all(rel <= tol)):
+                break
+            # Correction solve in the inner dtype, native domain.
+            v = to_dom(r64.astype(jnp.complex64))
+            res = _run_krylov(
+                method,
+                lambda w: dhat_nat(w, kappa),
+                lambda w: dhat_dag_nat(w, kappa),
+                v, tol=inner_tol, max_iters=max_iters,
+                recompute_every=recompute_every, batched=batched)
+            x64 = x64 + from_dom(res.x).astype(jnp.complex128)
+            iters_acc = iters_acc + res.iterations.astype(jnp.int32)
+            inner_iters += int(jnp.max(res.iterations))
+        else:
+            # Outer budget exhausted: report the residual of the final
+            # iterate, not the one from before the last correction.
+            r64 = rhs64 - dhat64(x64)
+            f64_applies += 1
+            rel = jnp.sqrt(bnorm(r64) / jnp.maximum(b2, 1e-300))
+        converged = rel <= tol
+
+        xi_o64 = eta64_o + kappa * hop_oe64(x64)
+        f64_applies += 1
+        xi_e = x64.astype(eta_e.dtype)
+        xi_o = xi_o64.astype(eta_o.dtype)
+        return xi_e, xi_o, RefinedResult(
+            x=xi_e, iterations=iters_acc, residual=rel,
+            converged=converged, outer_iterations=outer,
+            f64_applies=f64_applies, inner_iterations=inner_iters)
+
+    return refined
+
+
+def resolve_inner_backend(U_e, U_o, inner_dtype, backend, backend_opts):
+    """Bind the *inner* backend of a mixed-precision solve at the inner
+    dtype (shared by the legacy shim and :class:`repro.api.SolveSession`).
+
+    Planar backends re-planarize the gauge once at that dtype; the jnp
+    backend has no planar dtype, so its gauge is downcast to complex64 —
+    otherwise a complex128 gauge would promote every inner iteration
+    back to f64 arithmetic and the refinement would save nothing.  (bf16
+    has no complex counterpart: through jnp the inner solve runs at f32.)
+    An already-bound :class:`~repro.backends.WilsonOps` is used as-is —
+    the caller bound it at the dtype they meant.
+    """
+    from repro import backends as backends_lib
+
+    idt = resolve_inner_dtype(inner_dtype)
+    if backend is None:
+        backend = "jnp"
+    if isinstance(backend, backends_lib.WilsonOps):
+        return backend
+    opts = dict(backend_opts or {})
+    if backend == "jnp":
+        return backends_lib.make_wilson_ops(
+            backend, U_e.astype(jnp.complex64),
+            U_o.astype(jnp.complex64), **opts)
+    opts.setdefault("dtype", idt)
+    return backends_lib.make_wilson_ops(backend, U_e, U_o, **opts)
+
+
+def _solve_wilson_eo_refined(U_e, U_o, eta_e, eta_o, kappa, *, method,
+                             tol, max_iters, recompute_every, inner_dtype,
+                             inner_tol, max_outer, batched,
+                             backend, backend_opts):
+    """Legacy one-shot entry: bind the inner backend, build the refined
+    solve, run it once (see :func:`make_refined_solve`)."""
+    bops = resolve_inner_backend(U_e, U_o, inner_dtype, backend,
+                                 backend_opts)
+    fn = make_refined_solve(
+        bops, U_e, U_o, kappa, method=method, tol=tol,
+        max_iters=max_iters, recompute_every=recompute_every,
+        inner_tol=inner_tol, max_outer=max_outer, batched=batched)
+    return fn(eta_e, eta_o)

@@ -5,16 +5,24 @@ paper's kind (linear solves are the unit of work in lattice QCD).
   PYTHONPATH=src python -m repro.launch.solve --lattice wilson-16x16x16x16 \
       --tol 1e-6 --ckpt-dir /tmp/qcd_ck
 
+Built on the public object API (:mod:`repro.api`): the CLI args are
+parsed into one ``(LatticeSpec, BackendSpec, SolveSpec)`` triple, the
+gauge field is bound ONCE into a :class:`repro.api.WilsonMatrix` (layout
+conversion / sharding placement / policy selection at bind), and every
+solve goes through one :class:`repro.api.SolveSession` — so the Krylov
+loop is traced/compiled on the first solve only and each later
+same-shape solve reuses the executable.  The session's cache/timing
+report is printed at the end.
+
 Restart logic: CG is restart-friendly — checkpoint (x, step) and rebuild
 the residual from scratch on resume (r = b - A x); convergence continues
 where it left off.
 
-Multi-RHS: ``--nrhs N`` solves N sources as ONE batched Krylov solve —
-the kernels stream the gauge field once per application for the whole
-block, so per-RHS time drops as N grows (until VMEM bounds the block).
+Multi-RHS: ``--nrhs N`` solves N sources as ONE batched Krylov solve.
 ``--inner-dtype f32|bf16`` switches to mixed-precision iterative
 refinement (inner solves in the cheap dtype, outer f64 true-residual
-loop; enables jax x64 automatically).
+loop; enables jax x64 automatically).  ``--backend help`` prints the
+registry's per-backend capability metadata and exits.
 """
 from __future__ import annotations
 
@@ -24,9 +32,32 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import backends, configs
+from repro import api, backends, configs
 from repro.checkpoint.ckpt import Checkpointer
-from repro.core import evenodd, solver, su3, wilson
+from repro.core import evenodd, su3, wilson
+
+
+def _backend_help() -> str:
+    lines = ["registered operator backends (see also --backend help):"]
+    for name in backends.available_backends():
+        caps = backends.backend_info(name)
+        lines.append(f"  {name}: {caps.description} "
+                     f"[domain={caps.domain}, batched_kernels="
+                     f"{caps.batched_kernels}]")
+    return " ".join(lines)
+
+
+def _print_backend_info():
+    print("registered operator backends:")
+    for name in backends.available_backends():
+        caps = backends.backend_info(name)
+        print(f"  {name}")
+        print(f"    domain={caps.domain} gauge_form={caps.gauge_form} "
+              f"batched_kernels={caps.batched_kernels}")
+        print(f"    dtypes={list(caps.dtypes) or '(follows gauge)'} "
+              f"interpret={caps.supports_interpret} "
+              f"policies={list(caps.policies)}")
+        print(f"    {caps.description}")
 
 
 def main(argv=None):
@@ -34,15 +65,17 @@ def main(argv=None):
     ap.add_argument("--lattice", default="wilson-16x16x16x16")
     ap.add_argument("--kappa", type=float, default=0.13)
     ap.add_argument("--tol", type=float, default=1e-6)
+    # choices DERIVED from the solver's method tuple via SolveSpec —
+    # adding a Krylov method there adds it here (this is where plain
+    # "cg", valid on the normal equations, comes from).
     ap.add_argument("--method", default="cgnr",
-                    choices=["cgnr", "bicgstab"])
+                    choices=list(api.SolveSpec.METHODS))
     ap.add_argument("--backend", default="auto",
-                    choices=["auto"] + backends.available_backends(),
+                    choices=["auto", "help"] + backends.available_backends(),
                     help="operator backend (registry name); 'auto' picks "
-                         "jnp off-TPU and pallas_fused on TPU (whose "
-                         "three-way policy streams a plane window when "
-                         "the resident fused scratch overflows; "
-                         "pallas_fused_stream forces that kernel)")
+                         "jnp off-TPU and pallas_fused on TPU; 'help' "
+                         "prints per-backend capability metadata and "
+                         "exits. " + _backend_help())
     ap.add_argument("--nrhs", type=int, default=1,
                     help="number of right-hand sides per solve; >1 runs "
                          "the batched kernels (gauge field streamed once "
@@ -63,34 +96,46 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=1)
     args = ap.parse_args(argv)
 
+    if args.backend == "help":
+        _print_backend_info()
+        return
+
     inner_dtype = args.inner_dtype or None
     if inner_dtype:
         # The refinement outer loop measures its residual in f64.
         jax.config.update("jax_enable_x64", True)
 
     lat = configs.get_qcd(args.lattice)
-    T, Z, Y, X = lat.shape
-    print(f"lattice {lat.shape}, kappa={args.kappa}, nrhs={args.nrhs}"
+    lattice = api.LatticeSpec(lat.shape)
+    # Under mixed precision the bound matrix IS the inner-solve backend,
+    # so bind it at the inner dtype (jnp has no dtype knob: its inner
+    # solve runs at the gauge's complex64).  Resolve "auto" FIRST so
+    # e.g. auto->pallas_fused on TPU still honors --inner-dtype.
+    bname = api.BackendSpec(name=args.backend).resolve_name()
+    bspec = api.BackendSpec(
+        name=bname,
+        dtype=(inner_dtype if inner_dtype and bname != "jnp"
+               else None)).validated()
+    sspec = api.SolveSpec(
+        method=args.method, tol=args.tol,
+        recompute_every=args.recompute_every,
+        nrhs=args.nrhs if args.nrhs > 1 else None,
+        inner_dtype=inner_dtype)
+
+    T, Z, Y, X = lattice.extents
+    print(f"lattice {lattice.extents}, kappa={args.kappa}, "
+          f"nrhs={args.nrhs}"
           + (f", inner_dtype={inner_dtype}" if inner_dtype else ""))
 
     key = jax.random.PRNGKey(args.seed)
-    U = su3.random_gauge(key, lat.shape)
+    U = su3.random_gauge(key, lattice.extents)
     Ue, Uo = evenodd.pack_gauge(U)
-    backend = args.backend
-    if backend == "auto":
-        backend = ("pallas_fused" if jax.default_backend() == "tpu"
-                   else "jnp")
-    # bind once: keeps the planarized gauge, partitioning, and jit
-    # caches warm across the whole batch of solves; the solver then
-    # iterates in the backend's native domain (encode/decode once per
-    # solve, not once per operator application).  Under mixed precision
-    # the bound instance IS the inner-solve backend, so bind it at the
-    # inner dtype (the refined driver can't re-dtype a prebuilt bops).
-    opts = {}
-    if inner_dtype and backend != "jnp":
-        opts["dtype"] = solver.resolve_inner_dtype(inner_dtype)
-    bops = backends.make_wilson_ops(backend, Ue, Uo, **opts)
-    print(f"backend {backend} (native domain: {bops.domain})")
+    # Bind once: layout conversion, placement, and policy selection
+    # happen HERE; the session below then reuses one compiled solve for
+    # the whole batch of same-shape solves.
+    matrix = api.WilsonMatrix.bind(Ue, Uo, args.kappa, backend=bspec)
+    session = api.SolveSession(matrix, sspec)
+    print(f"backend {bspec.name} (native domain: {matrix.ops.domain})")
 
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
     nrhs = args.nrhs
@@ -111,10 +156,7 @@ def main(argv=None):
         else:
             ee, eo = evenodd.pack(eta)
         t0 = time.time()
-        xe, xo, res = solver.solve_wilson_eo(
-            Ue, Uo, ee, eo, args.kappa, method=args.method, tol=args.tol,
-            recompute_every=args.recompute_every,
-            inner_dtype=inner_dtype, backend=bops)
+        xe, xo, res = session.solve(ee, eo)
         if nrhs > 1:
             xi = jax.vmap(evenodd.unpack)(xe, xo)
             r = eta - jax.vmap(
@@ -137,6 +179,16 @@ def main(argv=None):
         print(line, flush=True)
         if ckpt:
             ckpt.save(i, (xe, xo), extras={"rel": rel}, block=True)
+
+    st = session.stats()
+    for keystr, row in st["keys"].items():
+        steady = (f"{row['steady_state_s']:.3f}s"
+                  if row["steady_state_s"] is not None else "n/a")
+        print(f"session[{keystr}]: solves={row['solves']} "
+              f"first={row['first_solve_s']:.3f}s steady={steady}")
+    print(f"session: solves={st['solves']} traces={st['traces']} "
+          f"cache_hits={st['cache_hits']} "
+          f"cache_misses={st['cache_misses']}")
     print("done")
 
 
