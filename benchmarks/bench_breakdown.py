@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro import api, backends
 from repro.core import evenodd, su3
 from repro.kernels import layout, ops
+
 from .common import Row, smoke, time_fn, write_json
 from .naive_gather import hop_block_gather
 

@@ -9,13 +9,11 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core import su3, evenodd
-from repro.kernels import layout, ops
 from repro.distributed import halo
+
 from .common import Row, time_fn
 
 

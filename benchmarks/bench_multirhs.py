@@ -22,8 +22,8 @@ Three claims, each demonstrated with a machine-checkable row in
 
 Operator binds and solves go through the public API
 (:class:`repro.api.WilsonMatrix` / :class:`repro.api.SolveSession`);
-the mixed-precision row deliberately keeps the legacy
-``solve_wilson_eo`` shim so the deprecated surface stays exercised.
+the deprecated ``solve_wilson_eo`` shim is exercised only by its
+designated parity tests in ``tests/test_api.py`` (lint rule R3).
 """
 from __future__ import annotations
 
@@ -31,12 +31,12 @@ import jax
 import jax.numpy as jnp
 
 from repro import api, backends
-from repro.core import evenodd, solver, su3
-from repro.kernels import ops
+from repro.core import evenodd, su3
 from repro.kernels.wilson_stencil import (dhat_stream_traffic_model,
                                           fused_dhat_policy,
                                           hop_traffic_model,
                                           stream_ring_bytes)
+
 from .common import Row, smoke, time_fn, write_json
 
 KAPPA = 0.13
@@ -239,16 +239,17 @@ def _mixed_precision_rows(shape) -> list:
         U64e, U64o = Ue.astype(jnp.complex128), Uo.astype(jnp.complex128)
         e64, o64 = e.astype(jnp.complex128), o.astype(jnp.complex128)
 
-        _, _, res_pure = solver.solve_wilson_eo(
-            U64e, U64o, e64, o64, KAPPA, method="cgnr", tol=tol,
-            backend="jnp")
+        _, _, res_pure = api.solve(
+            U64e, U64o, e64, o64, KAPPA, backend="jnp",
+            spec=api.SolveSpec(method="cgnr", tol=tol))
         # CGNR applies op + op_dag per iteration, plus the normal-eq RHS
         # and the final true-residual check.
         pure_f64_applies = 2 * int(res_pure.iterations) + 2
 
-        xe, _, res_mix = solver.solve_wilson_eo(
-            U64e, U64o, e64, o64, KAPPA, method="cgnr", tol=tol,
-            inner_dtype="f32", backend="jnp")
+        xe, _, res_mix = api.solve(
+            U64e, U64o, e64, o64, KAPPA, backend="jnp",
+            spec=api.SolveSpec(method="cgnr", tol=tol,
+                               inner_dtype="f32"))
         # Independent f64 residual check of the refined solution.
         rhs = e64 + KAPPA * evenodd.hop_eo(U64e, U64o, o64)
         r = rhs - evenodd.apply_dhat(U64e, U64o,

@@ -13,8 +13,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import backends
-from repro.core import evenodd, solver, su3, wilson
+from repro import api, backends
+from repro.core import evenodd, su3
+
 from .common import Row
 
 
@@ -38,11 +39,13 @@ def run() -> list:
             vol *= d
         for backend in backends_to_time:
             bops = backends.make_wilson_ops(backend, Ue, Uo)
+            matrix = api.WilsonMatrix.from_ops(bops, kappa,
+                                               gauge=(Ue, Uo))
             for method in ("cgnr", "bicgstab"):
+                session = api.SolveSession(
+                    matrix, api.SolveSpec(method=method, tol=1e-6))
                 t0 = time.perf_counter()
-                xe, xo, res = solver.solve_wilson_eo(
-                    Ue, Uo, ee, eo, kappa, method=method, tol=1e-6,
-                    backend=bops)
+                xe, xo, res = session.solve(ee, eo)
                 jax.block_until_ready(xe)
                 dt = time.perf_counter() - t0
                 iters = int(res.iterations)

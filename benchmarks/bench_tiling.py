@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import evenodd, su3
 from repro.kernels import layout, ops, ref
+
 from .common import Row, time_fn
 
 # (label, (T, Z, Y, X)) — paper Table 1 volumes, aspect-swept in (Y, X)

@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core import gamma
-from repro.core.lattice import MU_X, NDIM, row_parity
+from repro.core.lattice import NDIM
 
 
 def _neighbor_index(shape, mu, direction, out_parity):

@@ -1,0 +1,64 @@
+"""``repro.analysis`` — the repo's invariants as a mechanical CI gate.
+
+Five PRs of Wilson-kernel work accumulated a set of layout/packing
+invariants that the paper (arXiv 2303.08609) argues performance lives or
+dies on — and that until now were enforced by reviewer memory plus a
+handful of one-off jaxpr string checks in tests.  This package checks
+them mechanically, in two layers:
+
+**Layer 1 — AST convention linter** (:mod:`repro.analysis.lint` plus the
+per-rule modules under :mod:`repro.analysis.rules`): pure-syntax rules
+walked over every Python file in the repo.
+
+* **R1** — version-drifted JAX APIs (``shard_map``, ``make_mesh`` /
+  ``AxisType``, ``axis_size``, Pallas compiler params) may only be
+  touched via :mod:`repro.compat`; ``src/repro/kernels/`` alone may
+  import ``jax.experimental.pallas`` directly.
+* **R2** — operator implementations are reached through the backend
+  registry (``register_backend`` / ``get_backend``), never hand-wired
+  across module boundaries inside ``src/repro``.
+* **R3** — new callers configure via :mod:`repro.api` specs; calling the
+  deprecated ``solve_wilson_eo`` shim outside its own module and its
+  designated shim-parity tests (``tests/test_api.py``) is an error.
+* **R4** — no ``device_put`` / ``to_domain`` / layout-codec calls
+  syntactically inside a Krylov ``while_loop`` body in
+  ``core/solver.py`` (the conversion-free / placement-free hot loop).
+
+A finding can be waived inline with ``# repro-lint: allow[R2] reason``
+on the offending line (or the line above); waivers are for designated
+exemptions with a stated reason, not for postponing fixes — postponed
+findings belong in the ``--baseline`` file instead.
+
+**Layer 2 — jaxpr invariant analyzers**
+(:mod:`repro.analysis.jaxpr_checks`): structural checks that trace the
+real entry points.
+
+* **J1** — the native-domain Krylov solve is conversion-free: no
+  ``convert_element_type`` on spinor-shaped values anywhere in the
+  traced solve, except the compensated-reduction bf16→f32 upcasts.
+* **J2** — each fused-Dhat policy branch lowers to its exact
+  ``pallas_call`` count (resident: 1, stream: 1, unfused: 2) under the
+  declared kernel names.
+* **J3** — an independent static VMEM estimate agrees with
+  ``fused_dhat_policy`` / ``fused_dhat_fits`` / ``stream_ring_bytes``
+  at exact byte boundaries (and the ring is T-independent).
+* **J4** — a replayed :class:`repro.api.SolveSession` scenario stays
+  within its declared trace budget (no retrace regressions).
+
+Run the gate::
+
+    PYTHONPATH=src python -m repro.analysis            # lint + jaxpr
+    PYTHONPATH=src python -m repro.analysis --dead-code  # + seed audit
+
+Exit status is non-zero iff any finding is not in the baseline file
+(``--baseline analysis_baseline.json``; ship it empty — the gate exists
+to keep it that way).
+"""
+from __future__ import annotations
+
+from .findings import Finding, load_baseline, write_baseline
+from .lint import run_lint
+from .jaxpr_checks import run_jaxpr_checks
+
+__all__ = ["Finding", "load_baseline", "write_baseline", "run_lint",
+           "run_jaxpr_checks"]

@@ -1,0 +1,185 @@
+"""Dead-seed audit: which ``repro`` modules the product surface reaches.
+
+The growth seed shipped a generic LLM training scaffold (architecture
+configs, model zoo, optimizer stack, data pipeline, checkpointing)
+alongside the lattice-QCD line that this repo actually grows.  This
+audit walks the static import graph from the *product surface* — the
+public :mod:`repro.api` package and the :mod:`repro.launch.solve` CLI —
+and reports every ``repro`` module the surface never reaches, so dormant
+seed code is an explicit, reviewed list instead of silent weight.
+
+**Report-only by design**: ROADMAP item 5 earmarks parts of the dormant
+set (gauge-configuration checkpointing, data pipeline, ``train.py``'s
+launch loop) for harvest into QCD workflow tooling, so dormancy is
+expected there — those roots carry an ``intentional`` annotation rather
+than a deletion suggestion.  The runner never fails the gate on this
+report.
+
+Import edges are collected syntactically (``import x`` / ``from x
+import y``, absolute and relative), so conditional and function-local
+imports count as edges — this is a reachability audit, not a tree
+shaker.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Set, Tuple
+
+#: Modules the product actually serves: the public API, the ``python
+#: -m``-able CLIs (solver, dry-run cost model, roofline report), and
+#: this analysis gate itself.  ``repro.launch.train`` is deliberately
+#: NOT a root — it is a harvest target (see :data:`INTENTIONAL`), so it
+#: and everything only it reaches must show up in the report.
+ROOTS = ("repro.api", "repro.launch.solve", "repro.launch.dryrun",
+         "repro.launch.roofline", "repro.analysis.__main__")
+
+#: Dormant-on-purpose prefixes → the ROADMAP item that plans to harvest
+#: them.  These still appear in the report, annotated, so the list stays
+#: reviewed rather than forgotten.
+INTENTIONAL = {
+    "repro.checkpoint": "ROADMAP item 5: harvest for gauge-configuration "
+                        "save/restore",
+    "repro.data": "ROADMAP item 5: harvest for ensemble/source-batch "
+                  "pipelines",
+    "repro.launch.train": "ROADMAP item 5: harvest the launch loop for "
+                          "multi-solve QCD campaigns",
+}
+
+PACKAGE = "repro"
+
+
+def _module_name(rel_path: str) -> str:
+    """src/repro/a/b.py -> repro.a.b ; src/repro/a/__init__.py -> repro.a"""
+    parts = rel_path.replace(os.sep, "/").split("/")
+    assert parts[0] == "src"
+    parts = parts[1:]
+    if parts[-1] == "__init__.py":
+        parts = parts[:-1]
+    else:
+        parts[-1] = parts[-1][:-3]
+    return ".".join(parts)
+
+
+def collect_modules(root: str) -> Dict[str, str]:
+    """name -> repo-relative path for every module under src/repro."""
+    modules: Dict[str, str] = {}
+    base = os.path.join(root, "src", PACKAGE)
+    for dirpath, dirnames, filenames in os.walk(base):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in filenames:
+            if not fn.endswith(".py"):
+                continue
+            rel = os.path.relpath(os.path.join(dirpath, fn), root)
+            modules[_module_name(rel)] = rel
+    return modules
+
+
+def _resolve_relative(importer: str, is_pkg: bool, level: int,
+                      module: str) -> str:
+    # Relative imports resolve against the importer's package.
+    parts = importer.split(".")
+    if not is_pkg:
+        parts = parts[:-1]
+    if level > 1:
+        parts = parts[:-(level - 1)]
+    return ".".join(parts + ([module] if module else []))
+
+
+def import_edges(root: str, modules: Dict[str, str]
+                 ) -> Dict[str, Set[str]]:
+    """Static ``repro``-internal import graph over ``modules``."""
+    edges: Dict[str, Set[str]] = {name: set() for name in modules}
+    for name, rel in modules.items():
+        is_pkg = rel.endswith("__init__.py")
+        try:
+            with open(os.path.join(root, rel), encoding="utf-8") as fh:
+                tree = ast.parse(fh.read())
+        except (OSError, SyntaxError):
+            continue
+        targets: List[str] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                targets.extend(a.name for a in node.names)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:
+                    base = _resolve_relative(name, is_pkg, node.level,
+                                             node.module or "")
+                else:
+                    base = node.module or ""
+                targets.append(base)
+                targets.extend(f"{base}.{a.name}" for a in node.names
+                               if a.name != "*")
+        for tgt in targets:
+            # Longest known prefix: "repro.core.solver" matches the
+            # module; "repro.core" alone pulls in the package __init__.
+            while tgt and tgt not in modules:
+                tgt = tgt.rpartition(".")[0]
+            if tgt and tgt != name:
+                edges[name].add(tgt)
+    return edges
+
+
+def reachable(edges: Dict[str, Set[str]],
+              roots: Iterable[str]) -> Set[str]:
+    seen: Set[str] = set()
+    stack = [r for r in roots if r in edges]
+    while stack:
+        mod = stack.pop()
+        if mod in seen:
+            continue
+        seen.add(mod)
+        # Importing repro.a.b implicitly executes repro.a's __init__.
+        parent = mod.rpartition(".")[0]
+        if parent in edges and parent not in seen:
+            stack.append(parent)
+        stack.extend(edges[mod] - seen)
+    return seen
+
+
+def _annotation(name: str) -> Tuple[bool, str]:
+    for prefix, why in INTENTIONAL.items():
+        if name == prefix or name.startswith(prefix + "."):
+            return True, why
+    return False, ""
+
+
+def dead_code_report(root: str) -> dict:
+    """The audit as plain data (also what ``--json`` serializes)."""
+    modules = collect_modules(root)
+    edges = import_edges(root, modules)
+    live = reachable(edges, ROOTS)
+    dormant = []
+    for name in sorted(set(modules) - live):
+        intentional, why = _annotation(name)
+        dormant.append({"module": name, "path": modules[name],
+                        "intentional": intentional, "note": why})
+    return {
+        "roots": list(ROOTS),
+        "modules_total": len(modules),
+        "modules_live": len(live),
+        "dormant": dormant,
+    }
+
+
+def format_dead_code(report: dict) -> str:
+    lines = [
+        f"dead-seed audit (report-only): "
+        f"{report['modules_live']}/{report['modules_total']} modules "
+        f"reachable from {', '.join(report['roots'])}",
+    ]
+    intentional = [d for d in report["dormant"] if d["intentional"]]
+    dormant = [d for d in report["dormant"] if not d["intentional"]]
+    if dormant:
+        lines.append("")
+        lines.append("dormant seed modules (candidates for removal or "
+                     "future harvest):")
+        lines.extend(f"  {d['path']}  [{d['module']}]" for d in dormant)
+    if intentional:
+        lines.append("")
+        lines.append("dormant on purpose (annotated harvest targets):")
+        lines.extend(f"  {d['path']}  [{d['module']}] — {d['note']}"
+                     for d in intentional)
+    if not report["dormant"]:
+        lines.append("no dormant modules.")
+    return "\n".join(lines)

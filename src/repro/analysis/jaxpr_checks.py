@@ -1,0 +1,429 @@
+"""Jaxpr-level invariant analyzers (the "J" checks).
+
+Where :mod:`repro.analysis.lint` reads the *source*, these checks read
+the *traces*: they build tiny-lattice operators through the public
+registry/API, trace them with ``jax.make_jaxpr``, and assert the
+properties the performance story depends on but no numeric tolerance
+can see:
+
+* **J1 — conversion-free native iterate.**  The traced native-domain
+  solve pipeline of every registered backend contains no
+  ``convert_element_type`` on spinor-sized operands — except the
+  compensated-reduction upcasts (narrow float → f32/f64), which are the
+  point of :data:`repro.core.solver.COMPENSATED_REDUCTIONS`.
+* **J2 — exact pallas_call counts.**  One Dhat application traces to
+  exactly 1 ``pallas_call`` on the ``resident`` and ``stream`` fused
+  branches and exactly 2 on the ``unfused`` branch.  A refactor that
+  silently un-fuses (or double-launches) shows up here, not in any
+  parity test.
+* **J3 — VMEM model cross-check.**  The static scratch-byte estimates
+  (:func:`~repro.kernels.wilson_stencil.fused_dhat_fits`,
+  :func:`~repro.kernels.wilson_stencil.stream_ring_bytes`,
+  :func:`~repro.kernels.wilson_stencil.fused_dhat_policy`,
+  :func:`~repro.kernels.wilson_stencil.dhat_stream_traffic_model`)
+  agree with an independently-computed byte count, switch exactly at
+  the 12 MiB budget boundary, and the stream ring is T-independent.
+* **J4 — retrace budget.**  A replayed :class:`repro.api.SolveSession`
+  scenario (repeat solves, a shape change, a spec change) performs
+  exactly as many traces as distinct cache keys — the bind-once
+  contract expressed as a hard number.
+
+Every check takes injectable overrides (a wrapped ops factory, a
+replacement policy function, a sabotaged session factory) so the test
+suite can demonstrate each one *failing* on a seeded violation, not
+just passing on the healthy tree.
+
+All checks run on a 4x4x4x8 lattice and only *trace* (no kernel
+executes except J4's interpret-mode solves), so the whole layer is
+CI-cheap.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Iterable, List, Optional, Sequence
+
+from .findings import Finding
+
+# Findings are anchored at the definition site of the invariant's
+# subject so ``file:line`` in the report jumps somewhere actionable.
+_ANCHORS = {
+    "J1": ("src/repro/core/solver.py", "def make_native_solve"),
+    "J2": ("src/repro/kernels/ops.py", "def apply_dhat_planar_any"),
+    "J3": ("src/repro/kernels/wilson_stencil.py", "def fused_dhat_policy"),
+    "J4": ("src/repro/api/session.py", "class SolveSession"),
+}
+
+ALL_JAXPR_CHECKS = ("J1", "J2", "J3", "J4")
+
+_LATTICE = (4, 4, 4, 8)          # (X, Y, Z, T) — matches the test suite
+_KAPPA = 0.13
+
+
+def _anchor(root: str, check: str):
+    """(path, line) of the invariant's subject, by source search."""
+    import os
+    rel, needle = _ANCHORS[check]
+    path = os.path.join(root, rel)
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            for i, text in enumerate(fh, start=1):
+                if needle in text:
+                    return rel, i
+    except OSError:
+        pass
+    return rel, 1
+
+
+def _finding(root, check, message) -> Finding:
+    rel, line = _anchor(root, check)
+    return Finding(rule=check, path=rel, line=line, message=message)
+
+
+# --- shared tiny-lattice fixtures ------------------------------------
+
+
+def _tiny_eo(seed: int = 2):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import evenodd, su3
+
+    U = su3.random_gauge(jax.random.PRNGKey(seed), _LATTICE)
+    k1, k2 = jax.random.PRNGKey(3), jax.random.PRNGKey(4)
+    psi = (jax.random.normal(k1, (*_LATTICE, 4, 3))
+           + 1j * jax.random.normal(k2, (*_LATTICE, 4, 3))
+           ).astype(jnp.complex64)
+    e, o = evenodd.pack(psi)
+    Ue, Uo = evenodd.pack_gauge(U)
+    return Ue, Uo, e, o
+
+
+def _bind(name: str, Ue, Uo):
+    """Registry bind, interpret-mode for Pallas backends off-TPU."""
+    import jax
+    from repro import backends
+
+    opts = ({"interpret": True} if name.startswith("pallas")
+            and jax.default_backend() != "tpu" else {})
+    return backends.make_wilson_ops(name, Ue, Uo, **opts)
+
+
+def _walk_eqns(jaxpr):
+    """Depth-first over every eqn of a jaxpr and all nested sub-jaxprs
+    (while bodies, pjit calls, pallas_call kernels, ...).
+
+    Deliberately NOT deduplicated by sub-jaxpr identity: two call sites
+    of one cached pjit share the same ClosedJaxpr object, and J2 must
+    count each *launch*, not each distinct kernel body.  Jaxprs are
+    acyclic, so per-reference traversal terminates.
+    """
+    from jax import core as jcore
+
+    agenda = [jaxpr]
+    while agenda:
+        jx = agenda.pop()
+        if isinstance(jx, jcore.ClosedJaxpr):
+            jx = jx.jaxpr
+        for eqn in jx.eqns:
+            yield eqn
+            for val in eqn.params.values():
+                for sub in _as_jaxprs(val):
+                    agenda.append(sub)
+
+
+def _as_jaxprs(val):
+    from jax import core as jcore
+
+    if isinstance(val, (jcore.Jaxpr, jcore.ClosedJaxpr)):
+        yield val
+    elif isinstance(val, (tuple, list)):
+        for item in val:
+            yield from _as_jaxprs(item)
+
+
+# --- J1: conversion-free native iterate ------------------------------
+
+# Operands at or above this many elements are "spinor-sized"; scalars
+# and per-iteration reduction results stay exempt.
+_J1_MIN_ELEMENTS = 1024
+
+_FLOAT_WIDTH = {"bfloat16": 16, "float16": 16, "float32": 32,
+                "float64": 64}
+
+
+def _is_compensated_upcast(old_dtype, new_dtype) -> bool:
+    """Narrow-float → wider-float: the compensated-reduction pattern."""
+    ow = _FLOAT_WIDTH.get(str(old_dtype))
+    nw = _FLOAT_WIDTH.get(str(new_dtype))
+    return ow is not None and nw is not None and nw > ow
+
+
+def check_conversion_free(root: str, *,
+                          backends: Optional[Sequence[str]] = None,
+                          ops_transform: Optional[Callable] = None,
+                          method: str = "cgnr") -> List[Finding]:
+    """J1: the traced native solve has no layout/precision churn.
+
+    ``ops_transform(bops) -> bops`` lets the self-tests seed a
+    violation (e.g. wrap ``apply_dhat_native`` in a bf16 round-trip).
+    """
+    import jax
+    from repro.core import solver
+
+    if backends is None:
+        from repro import backends as breg
+        backends = breg.available_backends()
+
+    Ue, Uo, e, o = _tiny_eo()
+    findings: List[Finding] = []
+    for name in backends:
+        bops = _bind(name, Ue, Uo)
+        if ops_transform is not None:
+            bops = ops_transform(bops)
+        solve = solver.make_native_solve(bops, _KAPPA, method=method,
+                                         tol=1e-6, max_iters=8)
+        v_e, v_o = bops.to_domain(e), bops.to_domain(o)
+        jaxpr = jax.make_jaxpr(solve)(v_e, v_o)
+        for eqn in _walk_eqns(jaxpr):
+            if eqn.primitive.name != "convert_element_type":
+                continue
+            operand = eqn.invars[0].aval
+            if math.prod(operand.shape) < _J1_MIN_ELEMENTS:
+                continue
+            new_dtype = eqn.params.get("new_dtype")
+            if _is_compensated_upcast(operand.dtype, new_dtype):
+                continue
+            findings.append(_finding(
+                root, "J1",
+                f"backend {name!r} ({method}): convert_element_type "
+                f"{operand.dtype} -> {new_dtype} on a "
+                f"{tuple(operand.shape)} operand inside the native "
+                "solve trace — the Krylov iterate must stay in the "
+                "backend's native layout/precision (only "
+                "compensated-reduction float upcasts are exempt)"))
+            break   # one finding per backend is enough signal
+    return findings
+
+
+# --- J2: exact pallas_call counts per fused branch -------------------
+
+EXPECTED_PALLAS_CALLS = {"resident": 1, "stream": 1, "unfused": 2}
+
+
+def check_pallas_counts(root: str, *,
+                        apply_fn: Optional[Callable] = None,
+                        expected: Optional[dict] = None) -> List[Finding]:
+    """J2: each fused-policy branch launches its exact kernel count.
+
+    ``apply_fn(u_e_p, u_o_p, src_p, kappa, fused=...)`` overrides the
+    traced entry point so the self-tests can seed a double launch.
+    """
+    import jax
+    from repro.kernels import layout
+    from repro.kernels import ops as kops
+
+    if expected is None:
+        expected = EXPECTED_PALLAS_CALLS
+    if apply_fn is None:
+        def apply_fn(u_e_p, u_o_p, src_p, kappa, fused):
+            return kops.apply_dhat_planar_any(
+                u_e_p, u_o_p, src_p, kappa, fused=fused, interpret=True)
+
+    Ue, Uo, e, _ = _tiny_eo()
+    u_e_p, u_o_p = layout.gauge_to_planar(Ue), layout.gauge_to_planar(Uo)
+    src_p = layout.spinor_to_planar(e)
+
+    findings: List[Finding] = []
+    for branch, want in sorted(expected.items()):
+        jaxpr = jax.make_jaxpr(
+            lambda s: apply_fn(u_e_p, u_o_p, s, _KAPPA, branch))(src_p)
+        got = sum(1 for eqn in _walk_eqns(jaxpr)
+                  if eqn.primitive.name == "pallas_call")
+        if got != want:
+            findings.append(_finding(
+                root, "J2",
+                f"fused={branch!r}: one Dhat application traced to "
+                f"{got} pallas_call(s), expected exactly {want} — a "
+                "silent un-fusing (or double launch) changes the HBM "
+                "traffic story without failing any parity test"))
+    return findings
+
+
+# --- J3: static VMEM estimates cross-checked -------------------------
+
+
+def check_vmem_model(root: str, *,
+                     fits_fn: Optional[Callable] = None,
+                     ring_fn: Optional[Callable] = None,
+                     policy_fn: Optional[Callable] = None,
+                     limit_bytes: Optional[int] = None) -> List[Finding]:
+    """J3: the policy's byte math agrees with an independent estimate.
+
+    The override hooks substitute any one estimator so the self-tests
+    can seed an inconsistency (e.g. a policy that streams too early).
+    """
+    import jax.numpy as jnp
+    from repro.kernels import wilson_stencil as ws
+
+    fits = fits_fn or ws.fused_dhat_fits
+    ring = ring_fn or ws.stream_ring_bytes
+    policy = policy_fn or ws.fused_dhat_policy
+    limit = (ws._FUSED_SCRATCH_LIMIT_BYTES
+             if limit_bytes is None else limit_bytes)
+    window = ws.STREAM_WINDOW_ROWS
+    findings: List[Finding] = []
+
+    def plane_elems(shape):
+        # Elements of one t-plane of the (possibly batched) planar
+        # intermediate: everything except the T axis.
+        if len(shape) == 6:          # (nrhs, T, Z, 24, Y, Xh)
+            nrhs, _, Z, C, Y, Xh = shape
+        else:                        # (T, Z, 24, Y, Xh)
+            _, Z, C, Y, Xh = shape
+            nrhs = 1
+        return nrhs * Z * C * Y * Xh
+
+    # Shapes straddling the budget: resident fits / only the ring fits /
+    # nothing fits, plus exact-boundary rows for the <= vs < distinction.
+    T_at_limit = limit // (4 * 4 * 24 * 4 * 4)      # f32 (T,4,24,4,4)
+    cases = [
+        (4, 4, 24, 4, 2), (8, 8, 24, 8, 4),
+        (T_at_limit, 4, 24, 4, 4),          # resident == limit exactly
+        (T_at_limit + 1, 4, 24, 4, 4),      # one row over
+        (4096, 8, 24, 8, 4),                # huge T: stream territory
+        (2, 4096, 24, 64, 64),              # huge plane: unfused
+        (8, 4, 4, 24, 4, 2),                # batched nrhs=8
+    ]
+    for shape in cases:
+        for dtype in (jnp.float32, jnp.bfloat16):
+            itemsize = jnp.dtype(dtype).itemsize
+            resident = itemsize * math.prod(shape)
+            ringsz = itemsize * window * plane_elems(shape)
+
+            if fits(shape, dtype) != (resident <= limit):
+                findings.append(_finding(
+                    root, "J3",
+                    f"fused_dhat_fits({shape}, {jnp.dtype(dtype).name}) "
+                    f"disagrees with the independent estimate "
+                    f"{resident}B vs limit {limit}B"))
+            got_ring = ring(shape, dtype)
+            if got_ring != ringsz:
+                findings.append(_finding(
+                    root, "J3",
+                    f"stream_ring_bytes({shape}, "
+                    f"{jnp.dtype(dtype).name}) = {got_ring}, "
+                    f"independent estimate {ringsz} "
+                    f"({window} rows x {plane_elems(shape)} elems)"))
+            want_policy = ("resident" if resident <= limit else
+                           "stream" if ringsz <= limit else "unfused")
+            got_policy = policy(shape, dtype)
+            if got_policy != want_policy:
+                findings.append(_finding(
+                    root, "J3",
+                    f"fused_dhat_policy({shape}, "
+                    f"{jnp.dtype(dtype).name}) = {got_policy!r}, but "
+                    f"the byte math (resident {resident}B, ring "
+                    f"{ringsz}B, limit {limit}B) says {want_policy!r}"))
+
+    # The cap-lift itself: the ring must not grow with T.
+    if ring((8, 8, 24, 8, 4)) != ring((4096, 8, 24, 8, 4)):
+        findings.append(_finding(
+            root, "J3",
+            "stream_ring_bytes grew with T — the plane-window ring is "
+            "supposed to be T-independent (that is the VMEM cap-lift)"))
+
+    # The traffic model reports the same scratch numbers it budgets by.
+    model = ws.dhat_stream_traffic_model(16, 8, 8, 4, nrhs=2)
+    mring = ring((2, 16, 8, 24, 8, 4))
+    if model["vmem_ring_bytes"] != mring:
+        findings.append(_finding(
+            root, "J3",
+            f"dhat_stream_traffic_model reports vmem_ring_bytes="
+            f"{model['vmem_ring_bytes']} but stream_ring_bytes says "
+            f"{mring} for the same (T=16, Z=8, Y=8, Xh=4, nrhs=2)"))
+    if model["vmem_resident_bytes"] != 4 * math.prod((2, 16, 8, 24, 8, 4)):
+        findings.append(_finding(
+            root, "J3",
+            "dhat_stream_traffic_model's vmem_resident_bytes disagrees "
+            "with itemsize * prod(shape)"))
+    return findings
+
+
+# --- J4: retrace detector --------------------------------------------
+
+
+def check_retrace_budget(root: str, *,
+                         session_factory: Optional[Callable] = None,
+                         ) -> List[Finding]:
+    """J4: a replayed serving scenario traces once per distinct key.
+
+    Scenario: 3 solves on one (spec, shape) key, 2 on a second shape
+    (batched nrhs=2), 1 on a second spec — 6 solves, 3 keys, so the
+    declared budget is exactly 3 traces / 3 misses / 3 hits.
+
+    ``session_factory() -> SolveSession`` lets the self-tests seed a
+    cache-defeating session (e.g. one that clears its cache per solve).
+    """
+    import jax.numpy as jnp
+    from repro import api
+
+    Ue, Uo, e, o = _tiny_eo()
+    if session_factory is None:
+        def session_factory():
+            D = api.WilsonMatrix.bind(Ue, Uo, _KAPPA, backend="jnp")
+            return api.SolveSession(D, api.SolveSpec(
+                method="cgnr", tol=1e-5, max_iters=25))
+
+    session = session_factory()
+    spec2 = api.SolveSpec(method="bicgstab", tol=1e-5, max_iters=25)
+    eb = jnp.stack([e, e])
+    ob = jnp.stack([o, o])
+
+    session.solve(e, o)
+    session.solve(e, o)
+    session.solve(e, o)
+    session.solve(eb, ob)       # new shape key (batched pipeline)
+    session.solve(eb, ob)
+    session.solve(e, o, spec2)  # new spec key
+
+    stats = session.stats()
+    budget = {"solves": 6, "traces": 3,
+              "cache_misses": 3, "cache_hits": 3}
+    findings: List[Finding] = []
+    for key, want in budget.items():
+        got = stats.get(key)
+        if got != want:
+            findings.append(_finding(
+                root, "J4",
+                f"SolveSession scenario: {key} = {got}, declared "
+                f"budget {want} (6 solves over 3 distinct "
+                "(spec, shape) keys must compile exactly once each — "
+                "anything more is a retrace leak, anything less means "
+                "the trace counter stopped counting)"))
+    return findings
+
+
+# --- runner entry -----------------------------------------------------
+
+_CHECK_FNS = {
+    "J1": check_conversion_free,
+    "J2": check_pallas_counts,
+    "J3": check_vmem_model,
+    "J4": check_retrace_budget,
+}
+
+
+def run_jaxpr_checks(root: str,
+                     checks: Optional[Iterable[str]] = None
+                     ) -> List[Finding]:
+    """Run the selected (default: all) jaxpr invariant checks."""
+    selected = tuple(checks) if checks is not None else ALL_JAXPR_CHECKS
+    findings: List[Finding] = []
+    for name in selected:
+        try:
+            fn = _CHECK_FNS[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown jaxpr check {name!r}; "
+                f"choose from {ALL_JAXPR_CHECKS}") from None
+        findings.extend(fn(root))
+    return sorted(findings)

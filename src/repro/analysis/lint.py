@@ -1,0 +1,166 @@
+"""AST convention linter: engine + shared per-file context.
+
+The engine walks every Python file under the scanned roots, parses it
+once, builds a :class:`LintContext` (import-alias map, inline waivers,
+repo-relative path), and hands it to each rule module under
+:mod:`repro.analysis.rules`.  Rules are pure syntax — no imports of the
+scanned code are executed.
+
+Inline waivers: a line containing ``# repro-lint: allow[R2] <reason>``
+waives that rule on that line and the next (so the annotation can sit
+on its own line above a long statement).  Waivers are designated
+exemptions with a stated reason; anything else belongs in the baseline.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence
+
+from .findings import Finding
+
+__all__ = ["LintContext", "run_lint", "iter_source_files", "ALL_RULES",
+           "SCAN_DIRS"]
+
+# Directories scanned relative to the repo root.
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+
+# Directory names never scanned (fixture files contain deliberate
+# violations for the linter's own tests).
+SKIP_DIR_NAMES = {"__pycache__", ".git", "lint_fixtures", ".ruff_cache"}
+
+_ALLOW_RE = re.compile(r"#\s*repro-lint:\s*allow\[([A-Za-z0-9,\s]+)\]")
+
+
+class LintContext:
+    """Everything a rule needs about one parsed file."""
+
+    def __init__(self, path: str, source: str,
+                 tree: Optional[ast.AST] = None):
+        self.path = path              # repo-relative, posix separators
+        self.source = source
+        self.tree = tree if tree is not None else ast.parse(source)
+        self.lines = source.splitlines()
+        self.aliases = _collect_aliases(self.tree)
+        self.waivers = _collect_waivers(self.lines)
+
+    # --- alias resolution ---------------------------------------------
+
+    def resolve(self, node: ast.AST) -> Optional[str]:
+        """Resolve a Name/Attribute chain to a dotted path through this
+        file's import aliases (``pltpu.CompilerParams`` ->
+        ``jax.experimental.pallas.tpu.CompilerParams``).  Returns None
+        for chains not rooted in an imported name."""
+        parts = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        base = self.aliases.get(node.id)
+        if base is None:
+            return None
+        return ".".join([base] + list(reversed(parts)))
+
+    # --- waivers ------------------------------------------------------
+
+    def waived(self, rule: str, line: int) -> bool:
+        return rule in self.waivers.get(line, ())
+
+    def finding(self, rule: str, node: ast.AST, message: str
+                ) -> Optional[Finding]:
+        """Build a finding unless an inline waiver covers it."""
+        line = getattr(node, "lineno", 0)
+        if self.waived(rule, line):
+            return None
+        return Finding(rule=rule, path=self.path, line=line,
+                       message=message)
+
+
+def _collect_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Local name -> dotted module/object path, from top-level AND
+    function-local imports (the repo uses local imports to break
+    cycles; the conventions apply to those too)."""
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.level == 0:
+            mod = node.module or ""
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{mod}.{a.name}"
+    return aliases
+
+
+def _collect_waivers(lines: Sequence[str]) -> Dict[int, tuple]:
+    """Line number -> tuple of waived rule ids (the annotated line and
+    the line below it, so the comment can precede the statement)."""
+    waivers: Dict[int, tuple] = {}
+    for i, text in enumerate(lines, start=1):
+        m = _ALLOW_RE.search(text)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+        for line in (i, i + 1):
+            waivers[line] = tuple(set(waivers.get(line, ()) + rules))
+    return waivers
+
+
+def iter_source_files(root) -> Iterable[Path]:
+    root = Path(root)
+    for scan in SCAN_DIRS:
+        base = root / scan
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            if any(part in SKIP_DIR_NAMES for part in path.parts):
+                continue
+            yield path
+
+
+def _load_rules():
+    from .rules import ALL_RULES as rules
+    return rules
+
+
+def run_lint(root, files: Optional[Sequence] = None,
+             rules=None) -> List[Finding]:
+    """Lint the repo (or an explicit file list) with every rule.
+
+    ``files`` entries may be absolute or root-relative paths; findings
+    always report root-relative posix paths.
+    """
+    root = Path(root)
+    rules = list(rules) if rules is not None else _load_rules()
+    if files is None:
+        paths = list(iter_source_files(root))
+    else:
+        paths = [Path(f) if Path(f).is_absolute() else root / f
+                 for f in files]
+    findings: List[Finding] = []
+    for path in paths:
+        try:
+            source = path.read_text()
+            rel = path.relative_to(root).as_posix() \
+                if path.is_relative_to(root) else path.as_posix()
+            ctx = LintContext(rel, source)
+        except SyntaxError as e:
+            findings.append(Finding(
+                rule="PARSE", path=str(path), line=e.lineno or 0,
+                message=f"syntax error: {e.msg}"))
+            continue
+        for rule in rules:
+            for f in rule.check(ctx):
+                if f is not None:
+                    findings.append(f)
+    return sorted(findings)
+
+
+# Re-exported for the runner's --list-rules output.
+def ALL_RULES():
+    return _load_rules()

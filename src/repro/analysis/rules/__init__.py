@@ -1,0 +1,16 @@
+"""Per-rule lint modules.
+
+Each rule module exposes ``RULE_ID``, ``DESCRIPTION`` and
+``check(ctx) -> Iterable[Finding | None]`` (``None`` entries are
+waived findings and are dropped by the engine).  Register new rules by
+appending the module here — the runner, the tests, and ``--list-rules``
+all derive from this list.
+"""
+from __future__ import annotations
+
+from . import r1_compat, r2_registry, r3_api, r4_loop_hygiene
+
+ALL_RULES = (r1_compat, r2_registry, r3_api, r4_loop_hygiene)
+
+__all__ = ["ALL_RULES", "r1_compat", "r2_registry", "r3_api",
+           "r4_loop_hygiene"]

@@ -1,0 +1,110 @@
+"""R2 — operator implementations are reached through the registry.
+
+Inside ``src/repro``, Wilson-operator implementations (the pure-XLA
+even-odd reference, the planar Pallas kernels, the shard_map'd
+distributed operator) register under :func:`repro.backends.
+register_backend` and are bound by name; hand-wiring their callables
+across module boundaries bypasses the native-domain/bind-once contract
+every solver-side optimisation since PR 2 depends on.
+
+Scope: ``src/repro`` modules *outside* the implementation zone — the
+``kernels``/``backends``/``distributed``/``core`` packages, which ARE
+the implementations and may compose each other freely.  Tests and
+benchmarks are out of scope: measuring or asserting against a concrete
+kernel in isolation is their job.
+
+Flagged: importing an operator entry-point module
+(``repro.kernels.ops`` / ``wilson_stencil`` / ``ref``), importing an
+operator function by name, or calling one through a module alias
+(``evenodd.apply_dhat(...)``, ``wilson.apply_wilson(...)``).  Layout
+codecs (``pack`` / ``unpack`` / ``repro.kernels.layout``) are not
+operators and stay free.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+RULE_ID = "R2"
+DESCRIPTION = ("operator implementations only via the backend registry "
+               "(register_backend/get_backend), no cross-boundary "
+               "hand-wiring inside src/repro")
+
+SCOPE_PREFIX = "src/repro/"
+# Packages that ARE the operator implementations — plus the analysis
+# layer, whose *job* is to import implementations and inspect their
+# traces.
+IMPL_ZONE = ("src/repro/kernels/", "src/repro/backends/",
+             "src/repro/distributed/", "src/repro/core/",
+             "src/repro/analysis/")
+
+# Operator entry-point modules: importing these at all (from outside the
+# implementation zone) is hand-wiring.
+IMPL_MODULES = frozenset({
+    "repro.kernels.ops",
+    "repro.kernels.wilson_stencil",
+    "repro.kernels.ref",
+})
+
+# Modules whose *operator functions* are flagged but whose codec/helper
+# functions (pack, unpack, pack_gauge, random_gauge, ...) are fine.
+MIXED_MODULES = frozenset({
+    "repro.core.evenodd",
+    "repro.core.wilson",
+    "repro.distributed.qcd",
+}) | IMPL_MODULES
+
+OPERATOR_NAMES = frozenset({
+    "apply_dhat", "apply_dhat_dagger", "hop_oe", "hop_eo",
+    "apply_wilson", "apply_wilson_dagger",
+    "hop_oe_kernel", "hop_eo_kernel", "apply_dhat_kernel",
+    "apply_dhat_planar", "apply_dhat_planar_fused",
+    "apply_dhat_planar_stream", "apply_dhat_planar_any",
+    "dhat_planar_fused", "dhat_planar_fused_stream",
+    "hop_block", "hop_block_planar", "hop_block_ext_planar_native",
+    "make_hop_fn", "make_dhat_fn", "apply_dhat_planar_ref",
+})
+
+
+def _in_scope(path: str) -> bool:
+    if not path.startswith(SCOPE_PREFIX):
+        return False
+    return not any(path.startswith(zone) for zone in IMPL_ZONE)
+
+
+def check(ctx) -> Iterable:
+    if not _in_scope(ctx.path):
+        return
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name in IMPL_MODULES:
+                    yield ctx.finding(
+                        RULE_ID, node,
+                        f"import of operator module {a.name!r} outside "
+                        "the implementation packages: bind operators by "
+                        "name via repro.backends (or repro.api)")
+        elif isinstance(node, ast.ImportFrom) and node.level == 0:
+            mod = node.module or ""
+            for a in node.names:
+                full = f"{mod}.{a.name}"
+                if full in IMPL_MODULES or (
+                        mod in MIXED_MODULES
+                        and a.name in OPERATOR_NAMES):
+                    yield ctx.finding(
+                        RULE_ID, node,
+                        f"hand-wired operator import {full!r}: bind "
+                        "operators by name via repro.backends (or "
+                        "repro.api)")
+        elif isinstance(node, ast.Attribute):
+            if node.attr not in OPERATOR_NAMES:
+                continue
+            base = ctx.resolve(node.value) if isinstance(
+                node.value, (ast.Name, ast.Attribute)) else None
+            if base in MIXED_MODULES:
+                yield ctx.finding(
+                    RULE_ID, node,
+                    f"hand-wired operator call "
+                    f"{base}.{node.attr}: operators cross module "
+                    "boundaries only through the backend registry")

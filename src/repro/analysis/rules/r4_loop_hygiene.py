@@ -1,0 +1,95 @@
+"""R4 — Krylov loop bodies stay placement- and conversion-free.
+
+The PR 2 contract: solvers encode once at solve entry, iterate entirely
+in the backend's native vector domain, and decode once at exit.  A
+``device_put`` or a ``to_domain``/``from_domain``/planar-codec call
+*syntactically inside* a ``lax.while_loop`` body or cond in
+``core/solver.py`` would reintroduce a per-iteration placement or
+layout-conversion tax (60-75% per-call overhead measured in
+``bench_breakdown``) that no test tolerance would notice.
+
+Mechanically: every call to ``*.while_loop(cond, body, ...)`` in
+``solver.py`` has its ``cond``/``body`` arguments resolved (local
+``def`` or inline ``lambda``) and those subtrees scanned for the
+forbidden call names.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+RULE_ID = "R4"
+DESCRIPTION = ("no device_put / to_domain / layout-codec calls inside "
+               "Krylov while_loop bodies in core/solver.py")
+
+TARGET_PATH = "src/repro/core/solver.py"
+
+FORBIDDEN_CALLS = frozenset({
+    "device_put",
+    "to_domain", "from_domain",
+    "to_domain_batched", "from_domain_batched",
+    "spinor_to_planar", "spinor_from_planar",
+    "gauge_to_planar", "gauge_from_planar",
+})
+
+
+def _call_name(node: ast.Call) -> str:
+    fn = node.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""
+
+
+def _is_while_loop(node: ast.Call) -> bool:
+    return _call_name(node) == "while_loop"
+
+
+def _local_defs(scope_stack: List[ast.AST], name: str):
+    """Innermost-first lookup of a ``def name`` in the enclosing
+    function scopes (the ``body``/``cond`` closure pattern)."""
+    for scope in reversed(scope_stack):
+        for child in ast.walk(scope):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and child.name == name:
+                return child
+    return None
+
+
+def _scan_loop_fn(ctx, fn_node, role: str):
+    for node in ast.walk(fn_node):
+        if isinstance(node, ast.Call):
+            name = _call_name(node)
+            if name in FORBIDDEN_CALLS:
+                yield ctx.finding(
+                    RULE_ID, node,
+                    f"{name}() inside a while_loop {role} — the Krylov "
+                    "iteration must stay in the native domain on "
+                    "already-placed arrays (encode/decode/placement "
+                    "happen once, at the solve boundary)")
+
+
+def check(ctx) -> Iterable:
+    if ctx.path != TARGET_PATH:
+        return
+
+    # Track enclosing function scopes so Name arguments to while_loop
+    # resolve to the right local def.
+    def visit(node, scope_stack):
+        if isinstance(node, ast.Call) and _is_while_loop(node):
+            for role, arg in zip(("cond", "body"), node.args[:2]):
+                target = None
+                if isinstance(arg, ast.Lambda):
+                    target = arg
+                elif isinstance(arg, ast.Name):
+                    target = _local_defs(scope_stack, arg.id)
+                if target is not None:
+                    yield from _scan_loop_fn(ctx, target, role)
+        new_stack = scope_stack
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            new_stack = scope_stack + [node]
+        for child in ast.iter_child_nodes(node):
+            yield from visit(child, new_stack)
+
+    yield from visit(ctx.tree, [])

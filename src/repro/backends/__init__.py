@@ -25,10 +25,11 @@ native-domain operators:
 Pallas backends are native in the planar re/im layout
 (``(T, Z, 24, Y, Xh)`` float32, :mod:`repro.kernels.layout`); the
 ``distributed`` backend's domain is a *sharded* planar vector, placed on
-the device mesh by ``to_domain`` so it stays there across calls.  Krylov
-solvers (:func:`repro.core.solver.solve_wilson_eo`) encode once at solve
-entry, iterate entirely in the native domain, and decode once at exit —
-no per-iteration layout churn or re-placement.
+the device mesh by ``to_domain`` so it stays there across calls.  Krylov solvers
+(:func:`repro.core.solver.make_native_solve`, driven by
+:class:`repro.api.SolveSession`) encode once at solve entry, iterate
+entirely in the native domain, and decode once at exit — no
+per-iteration layout churn or re-placement.
 
 The complex-interface methods (``hop_oe``/``hop_eo``/``apply_dhat``/
 ``apply_dhat_dagger``) remain as thin ``from_domain . native . to_domain``

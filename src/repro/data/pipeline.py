@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import numpy as np

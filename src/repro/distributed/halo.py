@@ -13,9 +13,8 @@ elements.
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple, Union
+from typing import Tuple, Union
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

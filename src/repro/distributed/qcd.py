@@ -21,7 +21,6 @@ is kernel-free and fully analyzable).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax

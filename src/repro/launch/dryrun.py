@@ -18,7 +18,6 @@ Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
 """
 import argparse
 import dataclasses
-import functools
 import json
 import pathlib
 import re
@@ -113,7 +112,6 @@ def _probe_cfg(cfg: ModelConfig, groups: int) -> ModelConfig:
 
 
 def _probe_stats(jfn, args) -> Dict[str, Any]:
-    from repro.models import scan_util
     with _unrolled():
         lowered = jfn.lower(*args)
     compiled = lowered.compile()
@@ -424,6 +422,9 @@ def build_qcd_lowering(lat, mesh, *, backend: str = "jnp",
     zsh = mesh_lib.axis_size(mesh, part.z_axes) if hoist_gauge else 0
     gauge = jax.ShapeDtypeStruct(
         (4, T + 2 * tsh, Z + 2 * zsh, 18, Y, Xh), dtype)
+    # Dry-run lowering jits against abstract ShapeDtypeStructs, so there
+    # is no gauge to bind a registry backend to.
+    # repro-lint: allow[R2] abstract lowering needs the raw sharded dhat
     dhat = qcd_lib.make_dhat_fn(part, lat.kappa)
     jfn = jax.jit(dhat,
                   in_shardings=(part.gauge_sharding(), part.gauge_sharding(),

@@ -7,7 +7,7 @@ hybrid / VLM / audio enc-dec); per-arch instances live in
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -7,7 +7,6 @@ has a matching ``apply_*``.  Compute runs in ``cfg.compute_dtype``
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -10,15 +10,14 @@ layers whose last member is MoE, so the stack stays homogeneous.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from . import blocks, layers
 from .config import ModelConfig
-from .scan_util import xscan, unroll_scans
+from .scan_util import xscan
 
 Params = Dict[str, Any]
 

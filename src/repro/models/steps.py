@@ -7,8 +7,6 @@ opt_state, metrics); it composes with pjit via the sharding policy in
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

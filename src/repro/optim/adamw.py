@@ -4,7 +4,7 @@ parameter sharding, so FSDP shards m/v for free under pjit."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

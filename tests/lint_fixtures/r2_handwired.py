@@ -1,0 +1,19 @@
+"""Deliberate R2 violations (linter test fixture — never imported).
+
+Tested with a synthetic ``src/repro/...`` path outside the
+implementation zone, where hand-wiring operators is an error.
+"""
+from repro.kernels import ops                             # line 6: R2
+from repro.core.evenodd import apply_dhat                 # line 7: R2
+
+from repro.core import evenodd
+from repro.core.evenodd import pack                       # codec: fine
+
+
+def run(u_e_p, u_o_p, src, psi_e, psi_o, kappa):
+    out = ops.apply_dhat_planar_any(u_e_p, u_o_p, src, kappa)
+    a = apply_dhat(u_e_p, u_o_p, psi_e, kappa)
+    b = evenodd.hop_oe(u_e_p, u_o_p, psi_e)               # line 16: R2
+    # repro-lint: allow[R2] fixture-waived call, asserted waived in tests
+    c = evenodd.hop_eo(u_e_p, u_o_p, psi_o)
+    return out, a, b, c, pack

@@ -1,0 +1,9 @@
+"""Deliberate R3 violations (linter test fixture — never imported)."""
+from repro.core.solver import solve_wilson_eo             # line 2: R3
+
+from repro.core import solver
+
+
+def run(Ue, Uo, e, o, kappa):
+    xe, xo, res = solve_wilson_eo(Ue, Uo, e, o, kappa)    # line 8: R3 (Name)
+    return solver.solve_wilson_eo(Ue, Uo, xe, xo, kappa)  # line 9: R3 (Attribute)

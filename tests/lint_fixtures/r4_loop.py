@@ -1,0 +1,31 @@
+"""Deliberate R4 violations (linter test fixture — never imported).
+
+Tested with the synthetic path ``src/repro/core/solver.py`` — R4 only
+looks there.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def solve(bops, v, kappa):
+    def cond(state):
+        k, x = state
+        return k < 10
+
+    def body(state):
+        k, x = state
+        psi = bops.from_domain(x)                         # line 17: R4
+        x = bops.to_domain(jax.device_put(psi))           # line 18: R4 (x2)
+        return k + 1, x
+
+    def clean_body(state):
+        k, x = state
+        return k + 1, bops.apply_dhat_native(x, kappa)
+
+    state = jax.lax.while_loop(cond, body, (0, v))
+    state = jax.lax.while_loop(cond, clean_body, state)
+    # Inline-lambda cond with a placement call is also caught.
+    state = jax.lax.while_loop(
+        lambda s: jnp.any(jax.device_put(s[1]) > 0),      # line 29: R4
+        clean_body, state)
+    return state

@@ -387,3 +387,33 @@ def test_solve_wilson_eo_is_deprecation_shim():
     np.testing.assert_array_equal(np.asarray(xe), np.asarray(xe2))
     np.testing.assert_array_equal(np.asarray(xo), np.asarray(xo2))
     assert int(res.iterations) == int(res2.iterations)
+
+
+def test_shim_batched_via_explicit_fns():
+    """The legacy explicit-callable wiring also supports batched sources
+    (through the automatic vmap fallback of the identity domain).
+
+    Shim-only surface: ``apply_dhat_fn``-style overrides have no
+    repro.api equivalent and are deleted together with the shim.
+    """
+    Ue, Uo, e, o = make_eo(seed=51, nrhs=2)
+    xe, xo, res = solver.solve_wilson_eo(
+        Ue, Uo, e, o, KAPPA, method="bicgstab", tol=1e-5,
+        apply_dhat_fn=None)   # pure evenodd reference ops
+    assert res.converged.shape == (2,)
+    assert bool(res.converged.all())
+    xe_1, _, _ = solver.solve_wilson_eo(Ue, Uo, e[0], o[0], KAPPA,
+                                        method="bicgstab", tol=1e-5)
+    d = float(jnp.linalg.norm(xe[0] - xe_1) / jnp.linalg.norm(xe_1))
+    assert d < 1e-4, d
+
+
+def test_shim_inner_dtype_rejects_explicit_operator_fns():
+    """Mixed precision rebuilds the operator from the gauge field; a
+    silent mismatch with the shim's explicit *_fn overrides must be an
+    error (shim-only surface, deleted together with the shim)."""
+    Ue, Uo, e, o = make_eo(seed=45)
+    with pytest.raises(ValueError, match="operator overrides"):
+        solver.solve_wilson_eo(
+            Ue, Uo, e, o, KAPPA, inner_dtype="f32",
+            apply_dhat_fn=lambda v: v)

@@ -211,9 +211,10 @@ def test_distributed_native_ops_no_per_call_device_put(small_eo,
 
 @pytest.mark.parametrize("name", BUILTIN_BACKENDS[1:])
 def test_native_solve_matches_complex_solve(name, small_eo):
-    """Acceptance: the natively-iterating solve agrees with the old
-    complex-interface hand-wired path to tolerance, and encodes/decodes
-    exactly once per solve (not once per iteration)."""
+    """Acceptance: the natively-iterating solve agrees with a
+    complex-interface iteration of the same backend to tolerance, and
+    encodes/decodes exactly once per solve (not once per iteration)."""
+    from repro import api
     from repro.core import solver
 
     Ue, Uo, e, o, kappa = small_eo
@@ -233,8 +234,10 @@ def test_native_solve_matches_complex_solve(name, small_eo):
     layout.spinor_to_planar = counting_to
     layout.spinor_from_planar = counting_from
     try:
-        xe, xo, res = solver.solve_wilson_eo(
-            Ue, Uo, e, o, kappa, method="bicgstab", tol=1e-5, backend=bops)
+        D = api.WilsonMatrix.from_ops(bops, kappa, gauge=(Ue, Uo))
+        session = api.SolveSession(
+            D, api.SolveSpec(method="bicgstab", tol=1e-5))
+        xe, xo, res = session.solve(e, o)
     finally:
         layout.spinor_to_planar = orig_to
         layout.spinor_from_planar = orig_from
@@ -243,12 +246,13 @@ def test_native_solve_matches_complex_solve(name, small_eo):
     assert counts["to"] == 2, counts
     assert counts["from"] == 2, counts
 
-    # old complex-interface wiring through the same backend
-    xe_c, xo_c, _ = solver.solve_wilson_eo(
-        Ue, Uo, e, o, kappa, method="bicgstab", tol=1e-5,
-        apply_dhat_fn=lambda v: bops.apply_dhat(v, kappa),
-        hop_oe_fn=lambda ue, uo, p: bops.hop_oe(p),
-        hop_eo_fn=lambda ue, uo, p: bops.hop_eo(p))
+    # complex-interface iteration of the same backend's operators:
+    # Eq. (4) Schur solve on Dhat, Eq. (5) odd reconstruction.
+    rhs = e + kappa * bops.hop_eo(o)
+    res_c = solver.bicgstab(lambda v: bops.apply_dhat(v, kappa),
+                            rhs, tol=1e-5, max_iters=2000)
+    xe_c = res_c.x
+    xo_c = o + kappa * bops.hop_oe(xe_c)
     np.testing.assert_allclose(np.asarray(xe), np.asarray(xe_c), atol=2e-4)
     np.testing.assert_allclose(np.asarray(xo), np.asarray(xo_c), atol=2e-4)
 
@@ -278,12 +282,12 @@ def test_legacy_complex_only_factory_gets_identity_domain():
 
 
 def test_solver_accepts_backend_string(small_eo):
-    from repro.core import solver
+    from repro import api
 
     Ue, Uo, e, o, kappa = small_eo
-    xe, xo, res = solver.solve_wilson_eo(
-        Ue, Uo, e, o, kappa, method="bicgstab", tol=1e-5,
-        backend="pallas_fused", backend_opts={"interpret": True})
+    xe, xo, res = api.solve(
+        Ue, Uo, e, o, kappa, backend="pallas_fused", interpret=True,
+        spec=api.SolveSpec(method="bicgstab", tol=1e-5))
     # verify against the jnp-backend operator: Dhat xe == rhs
     bops = backends.make_wilson_ops("jnp", Ue, Uo)
     rhs = e + kappa * bops.hop_eo(o)

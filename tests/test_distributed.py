@@ -7,7 +7,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import backends
+from repro import api, backends
 from repro.core import evenodd, solver, su3
 from repro.kernels import layout
 from repro.kernels.wilson_stencil import (fused_dhat_fits,
@@ -90,14 +90,14 @@ def test_batched_solve_matches_sequential(name):
     Ue, Uo, e, o = make_batched_eo((4, 4, 4, 8), NRHS, seed=21)
     kappa = 0.13
     bops = _bind(name, Ue, Uo)
-    xe_b, xo_b, res = solver.solve_wilson_eo(
-        Ue, Uo, e, o, kappa, method="bicgstab", tol=1e-5, backend=bops)
+    session = api.SolveSession(
+        api.WilsonMatrix.from_ops(bops, kappa, gauge=(Ue, Uo)),
+        api.SolveSpec(method="bicgstab", tol=1e-5))
+    xe_b, xo_b, res = session.solve(e, o)
     assert res.converged.shape == (NRHS,)
     assert bool(res.converged.all()), res
     for n in range(NRHS):
-        xe_1, xo_1, _ = solver.solve_wilson_eo(
-            Ue, Uo, e[n], o[n], kappa, method="bicgstab", tol=1e-5,
-            backend=bops)
+        xe_1, xo_1, _ = session.solve(e[n], o[n])
         for got, want in ((xe_b[n], xe_1), (xo_b[n], xo_1)):
             d = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
             assert d < 1e-4, (name, n, d)
@@ -194,21 +194,12 @@ def test_bicgstab_batched_recompute_every():
                                atol=1e-4)
 
 
-def test_inner_dtype_rejects_explicit_operator_fns():
-    """Mixed precision rebuilds the operator from the gauge field; a
-    silent mismatch with explicit *_fn overrides must be an error."""
-    Ue, Uo, e, o = make_batched_eo((4, 4, 4, 8), 1, seed=45)
-    with pytest.raises(ValueError, match="operator overrides"):
-        solver.solve_wilson_eo(
-            Ue, Uo, e[0], o[0], 0.13, inner_dtype="f32",
-            apply_dhat_fn=lambda v: v)
-
-
 def test_bicgstab_healthy_solves_still_converge(small_eo):
     """The breakdown guards must not trip on a healthy Wilson solve."""
     Ue, Uo, e, o, kappa = small_eo
-    xe, xo, res = solver.solve_wilson_eo(Ue, Uo, e, o, kappa,
-                                         method="bicgstab", tol=1e-5)
+    xe, xo, res = api.solve(
+        Ue, Uo, e, o, kappa,
+        spec=api.SolveSpec(method="bicgstab", tol=1e-5))
     assert bool(res.converged), res
 
 
@@ -226,16 +217,16 @@ def test_mixed_precision_reaches_f64_tol():
         U64e = Ue.astype(jnp.complex128)
         U64o = Uo.astype(jnp.complex128)
 
-        _, _, pure = solver.solve_wilson_eo(
-            U64e, U64o, e, o, 0.13, method="cgnr", tol=tol, backend="jnp")
+        _, _, pure = api.solve(
+            U64e, U64o, e, o, 0.13, backend="jnp",
+            spec=api.SolveSpec(method="cgnr", tol=tol))
         assert bool(pure.converged)
         pure_applies = 2 * int(pure.iterations) + 2
 
-        cfg = solver.SolverConfig(tol=tol, max_iters=2000,
-                                  inner_dtype="f32")
-        xe, xo, mix = solver.solve_wilson_eo(
-            U64e, U64o, e, o, 0.13, method="cgnr", config=cfg,
-            backend="jnp")
+        spec = api.SolveSpec(method="cgnr", tol=tol, max_iters=2000,
+                             inner_dtype="f32")
+        xe, xo, mix = api.solve(U64e, U64o, e, o, 0.13, backend="jnp",
+                                spec=spec)
         assert bool(mix.converged), mix
         assert mix.f64_applies < pure_applies, (mix.f64_applies,
                                                 pure_applies)
@@ -252,8 +243,8 @@ def test_mixed_precision_requires_x64():
     if jnp.zeros((), jnp.float64).dtype == jnp.dtype(jnp.float64):
         pytest.skip("x64 already enabled in this session")
     with pytest.raises(ValueError, match="x64"):
-        solver.solve_wilson_eo(Ue, Uo, e[0], o[0], 0.13,
-                               inner_dtype="f32", backend="jnp")
+        api.solve(Ue, Uo, e[0], o[0], 0.13, backend="jnp",
+                  spec=api.SolveSpec(inner_dtype="f32"))
 
 
 def test_fused_dhat_fits_dtype_derived():
@@ -376,7 +367,7 @@ def test_bf16_inner_converges_where_naive_stalls(monkeypatch):
       refinement pass built on it;
     * with COMPENSATED (f32-accumulate) scalars the same inner solve
       genuinely contracts the error, and the full
-      ``solve_wilson_eo(inner_dtype="bf16", inner_tol=1e-3)`` refinement
+      ``SolveSpec(inner_dtype="bf16", inner_tol=1e-3)`` refinement
       converges to the f64 tolerance.
     """
     from jax.experimental import enable_x64
@@ -416,26 +407,12 @@ def test_bf16_inner_converges_where_naive_stalls(monkeypatch):
     # operators reaches the f64 tolerance with compensated scalars.
     with enable_x64():
         e64, o64 = e.astype(jnp.complex128), o.astype(jnp.complex128)
-        xe, _, res = solver.solve_wilson_eo(
-            Ue.astype(jnp.complex128), Uo.astype(jnp.complex128),
-            e64, o64, kappa, method="bicgstab", tol=1e-3,
-            inner_dtype="bf16", inner_tol=inner_tol, max_outer=10,
-            backend=bops)
+        matrix = api.WilsonMatrix.from_ops(
+            bops, kappa, gauge=(Ue.astype(jnp.complex128),
+                                Uo.astype(jnp.complex128)))
+        spec = api.SolveSpec(method="bicgstab", tol=1e-3,
+                             inner_dtype="bf16", inner_tol=inner_tol,
+                             max_outer=10)
+        xe, _, res = api.SolveSession(matrix, spec).solve(e64, o64)
         assert bool(jnp.all(res.converged)), res
         assert res.outer_iterations <= 10
-
-
-def test_solve_wilson_eo_batched_via_explicit_fns():
-    """The legacy explicit-callable wiring also supports batched sources
-    (through the automatic vmap fallback of the identity domain)."""
-    Ue, Uo, e, o = make_batched_eo((4, 4, 4, 8), NRHS, seed=51)
-    kappa = 0.13
-    xe, xo, res = solver.solve_wilson_eo(
-        Ue, Uo, e, o, kappa, method="bicgstab", tol=1e-5,
-        apply_dhat_fn=None)   # pure evenodd reference ops
-    assert res.converged.shape == (NRHS,)
-    assert bool(res.converged.all())
-    xe_1, _, _ = solver.solve_wilson_eo(Ue, Uo, e[0], o[0], kappa,
-                                        method="bicgstab", tol=1e-5)
-    d = float(jnp.linalg.norm(xe[0] - xe_1) / jnp.linalg.norm(xe_1))
-    assert d < 1e-4, d

@@ -4,8 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core import evenodd, solver, wilson
-from repro.kernels import ops
 
 
 @pytest.mark.parametrize("method", ["cgnr", "bicgstab"])
@@ -18,8 +18,8 @@ def test_solve_full_system(small_lattice, small_eo, method):
                                     U.shape[1:5] + (4, 3))
            ).astype(jnp.complex64)
     ee, eo = evenodd.pack(eta)
-    xe, xo, res = solver.solve_wilson_eo(Ue, Uo, ee, eo, kappa,
-                                         method=method, tol=1e-6)
+    xe, xo, res = api.solve(Ue, Uo, ee, eo, kappa,
+                            spec=api.SolveSpec(method=method, tol=1e-6))
     assert bool(res.converged)
     xi = evenodd.unpack(xe, xo)
     r = eta - wilson.apply_wilson(U, xi, kappa)
@@ -28,18 +28,13 @@ def test_solve_full_system(small_lattice, small_eo, method):
 
 
 def test_solver_with_pallas_backend(small_lattice, small_eo):
-    """Same solve with the Pallas-backed hopping blocks."""
+    """Same solve with the Pallas-backed hopping blocks, bound by name
+    through the registry."""
     U, _, kappa = small_lattice
     Ue, Uo, ee, eo, _ = small_eo
-    Uep, Uop = ops.make_planar_fields(Ue, Uo)
-    hop_oe = lambda ue, uo, pe: ops.hop_oe_kernel(Uep, Uop, pe,
-                                                  interpret=True)
-    hop_eo = lambda ue, uo, po: ops.hop_eo_kernel(Uep, Uop, po,
-                                                  interpret=True)
-    xe, xo, res = solver.solve_wilson_eo(Ue, Uo, ee, eo, kappa,
-                                         method="bicgstab", tol=1e-5,
-                                         hop_oe_fn=hop_oe,
-                                         hop_eo_fn=hop_eo)
+    xe, xo, res = api.solve(
+        Ue, Uo, ee, eo, kappa, backend="pallas", interpret=True,
+        spec=api.SolveSpec(method="bicgstab", tol=1e-5))
     xi = evenodd.unpack(xe, xo)
     eta = evenodd.unpack(ee, eo)
     r = eta - wilson.apply_wilson(U, xi, kappa)
@@ -96,13 +91,13 @@ def test_cg_recompute_every_converges_to_same_solution():
 
 @pytest.mark.parametrize("method", ["cgnr", "bicgstab"])
 def test_solve_wilson_recompute_every(small_lattice, small_eo, method):
-    """recompute_every threads through solve_wilson_eo (and SolverConfig)
-    into the while_loop'd Krylov solvers; the true solution comes back."""
+    """recompute_every threads through SolveSpec into the while_loop'd
+    Krylov solvers; the true solution comes back."""
     U, _, kappa = small_lattice
     Ue, Uo, ee, eo, _ = small_eo
-    cfg = solver.SolverConfig(tol=1e-6, max_iters=2000, recompute_every=7)
-    xe, xo, res = solver.solve_wilson_eo(Ue, Uo, ee, eo, kappa,
-                                         method=method, config=cfg)
+    spec = api.SolveSpec(method=method, tol=1e-6, max_iters=2000,
+                         recompute_every=7)
+    xe, xo, res = api.solve(Ue, Uo, ee, eo, kappa, spec=spec)
     assert bool(res.converged)
     xi = evenodd.unpack(xe, xo)
     eta = evenodd.unpack(ee, eo)
@@ -122,8 +117,8 @@ def test_even_odd_preconditioning_helps(small_lattice, small_eo):
                                     U.shape[1:5] + (4, 3))
            ).astype(jnp.complex64)
     ee, eo = evenodd.pack(eta)
-    _, _, res_eo = solver.solve_wilson_eo(Ue, Uo, ee, eo, kappa,
-                                          method="cgnr", tol=1e-6)
+    _, _, res_eo = api.solve(Ue, Uo, ee, eo, kappa,
+                             spec=api.SolveSpec(method="cgnr", tol=1e-6))
     full = solver.cgnr(
         lambda v: wilson.apply_wilson(U, v, kappa),
         lambda v: wilson.apply_wilson_dagger(U, v, kappa),

@@ -23,7 +23,6 @@ import pytest
 
 from repro import backends
 from repro.core import evenodd, solver, su3
-from repro.kernels import layout
 
 SHAPE = (2, 2, 2, 4)
 KAPPA = 0.13

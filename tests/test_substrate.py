@@ -1,12 +1,9 @@
 """Substrate tests: checkpointing (atomic/last-k/reshard), data pipeline
 determinism, optimizer behavior, gradient accumulation equivalence."""
-import json
-import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.ckpt import Checkpointer
 from repro.data.pipeline import BinaryShards, DataConfig, SyntheticLM

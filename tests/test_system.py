@@ -4,10 +4,9 @@ API, including the Pallas-backed path and checkpoint/restart."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro import configs
-from repro.core import evenodd, solver, su3, wilson
+from repro import api, configs
+from repro.core import evenodd, su3, wilson
 from repro.kernels import ops
 
 
@@ -25,8 +24,9 @@ def test_end_to_end_solve_paper_pipeline():
            ).astype(jnp.complex64)
     Ue, Uo = evenodd.pack_gauge(U)
     ee, eo = evenodd.pack(eta)
-    xe, xo, res = solver.solve_wilson_eo(Ue, Uo, ee, eo, kappa,
-                                         method="bicgstab", tol=1e-6)
+    xe, xo, res = api.solve(Ue, Uo, ee, eo, kappa,
+                            spec=api.SolveSpec(method="bicgstab",
+                                               tol=1e-6))
     xi = evenodd.unpack(xe, xo)
     rel = float(jnp.linalg.norm(eta - wilson.apply_wilson(U, xi, kappa))
                 / jnp.linalg.norm(eta))
