@@ -2,24 +2,88 @@
 
 Measures the halo-extension path (slice + ppermute + concat) against the
 bulk stencil on the same local volume, and reports the halo-to-bulk byte
-ratio that governs the overlap window at scale.  Runs on however many
-devices the process has (1 device -> self-permute, still structurally
-identical)."""
+ratio that governs the overlap window at scale.  On top of that, the
+distributed-operator rows carry the two bandwidth levers this repo
+implements for the exchange:
+
+* ``halo_dhat_overlap_{fused,interior}`` — one full Dhat with the
+  serialized schedule vs the interior/boundary split that runs the
+  interior stencil while the exchange is in flight;
+* ``halo_gauge_{none,two_row,minimal}`` — one full Dhat per link
+  representation, with the *modeled* per-exchange gauge bytes
+  (``halo_traffic_model``: links are shipped compressed, so two_row
+  cuts gauge halo traffic by 1/3 and minimal by 5/9) next to the
+  *measured* deviation from the uncompressed output.
+
+Runs on however many devices the process has (1 device ->
+self-permute, still structurally identical).  Rows are mirrored to
+``BENCH_halo.json``; CI asserts modeled compressed bytes < uncompressed
+and measured parity <= 1e-5 from that file.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro import compat
+from repro import backends, compat
+from repro.core import evenodd, su3
 from repro.distributed import halo
+from repro.kernels import layout
 
-from .common import Row, time_fn
+from .common import Row, smoke, time_fn, write_json
+
+_KAPPA = 0.13
+
+
+def _dist_rows(Tl: int, Zl: int, Y: int, Xh: int) -> list:
+    """Overlap-schedule and link-compression rows on one full Dhat."""
+    rows: list[Row] = []
+    shape = (Tl, Zl, Y, 2 * Xh)
+    U = su3.random_gauge(jax.random.PRNGKey(2), shape)
+    k = jax.random.PRNGKey(3)
+    psi = (jax.random.normal(k, (*shape, 4, 3))
+           + 1j * jax.random.normal(jax.random.fold_in(k, 1),
+                                    (*shape, 4, 3))).astype(jnp.complex64)
+    e, _ = jax.vmap(evenodd.pack)(psi[None])
+    Ue, Uo = evenodd.pack_gauge(U)
+
+    def bind(**opts):
+        ops = backends.make_wilson_ops("distributed", Ue, Uo, **opts)
+        fn = jax.jit(ops.apply_dhat, static_argnums=1)
+        return fn, np.asarray(fn(e[0], _KAPPA))
+
+    fused_fn, ref = bind(overlap="fused")
+    us_fused = time_fn(fused_fn, e[0], _KAPPA)
+    rows.append(("halo_dhat_overlap_fused", us_fused, "overlap=fused"))
+
+    interior_fn, got = bind(overlap="interior")
+    us_int = time_fn(interior_fn, e[0], _KAPPA)
+    rows.append(("halo_dhat_overlap_interior", us_int,
+                 f"overlap=interior;fused_over_interior="
+                 f"{us_fused / us_int:.3f}x;max_abs_diff_vs_fused="
+                 f"{np.max(np.abs(got - ref)):.3e}"))
+
+    for mode in ("none", "two_row", "minimal"):
+        gc = layout.GAUGE_COMPRESSIONS[mode]
+        m = halo.halo_traffic_model(Tl, Zl, Y, Xh, gauge_comps=gc)
+        fn, got = bind(overlap="fused", gauge_compression=mode)
+        us = time_fn(fn, e[0], _KAPPA)
+        rows.append((f"halo_gauge_{mode}", us,
+                     f"gauge_comps={gc}"
+                     f";model_gauge_exchange_bytes="
+                     f"{m['bytes_gauge_exchange']}"
+                     f";model_dhat_exchange_bytes="
+                     f"{m['bytes_dhat_exchange']}"
+                     f";max_abs_diff_vs_none="
+                     f"{np.max(np.abs(got - ref)):.3e}"))
+    return rows
 
 
 def run() -> list:
     rows: list[Row] = []
-    Tl, Zl, Y, Xh = 8, 8, 16, 16
+    Tl, Zl, Y, Xh = (4, 4, 4, 4) if smoke() else (8, 8, 16, 16)
     spin = jax.random.normal(jax.random.PRNGKey(0),
                              (Tl, Zl, 24, Y, Xh))
 
@@ -51,4 +115,7 @@ def run() -> list:
     unpack = jax.jit(lambda x, lo, hi: jnp.concatenate([lo, x, hi], 0))
     us_unpack = time_fn(unpack, spin, spin[:1], spin[-1:])
     rows.append(("halo_unpack_eo2", us_unpack, "concat_t"))
+
+    rows.extend(_dist_rows(Tl, Zl, Y, Xh))
+    write_json("halo", rows)
     return rows

@@ -21,9 +21,8 @@ Three claims, each demonstrated with a machine-checkable row in
    first-solve time the cold-start one.
 
 Operator binds and solves go through the public API
-(:class:`repro.api.WilsonMatrix` / :class:`repro.api.SolveSession`);
-the deprecated ``solve_wilson_eo`` shim is exercised only by its
-designated parity tests in ``tests/test_api.py`` (lint rule R3).
+(:class:`repro.api.WilsonMatrix` / :class:`repro.api.SolveSession`) —
+the only solve surface since the legacy shim's removal (lint rule R3).
 """
 from __future__ import annotations
 

@@ -15,9 +15,10 @@ import subprocess
 import sys
 import textwrap
 
-from .common import Row
+from .common import Row, smoke, write_json
 
 _CHILD = """
+import os
 import time
 import jax, jax.numpy as jnp
 from repro import compat
@@ -26,8 +27,9 @@ from repro.kernels import layout, ops
 from repro.distributed import qcd
 
 n = jax.device_count()
+smoke = os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
 Tl = 4
-T, Z, Y, X = Tl * n, 8, 8, 16
+T, Z, Y, X = (Tl * n, 4, 4, 8) if smoke else (Tl * n, 8, 8, 16)
 U = su3.random_gauge(jax.random.PRNGKey(0), (T, Z, Y, X))
 psi = (jax.random.normal(jax.random.PRNGKey(1), (T, Z, Y, X, 4, 3))
        + 1j*jax.random.normal(jax.random.PRNGKey(2), (T, Z, Y, X, 4, 3))
@@ -58,7 +60,7 @@ def run() -> list:
     rows: list[Row] = []
     repo = pathlib.Path(__file__).resolve().parents[1]
     base = None
-    for n in (1, 2, 4, 8):
+    for n in (1, 2) if smoke() else (1, 2, 4, 8):
         env = dict(os.environ)
         env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n} "
                             + env.get("XLA_FLAGS", ""))
@@ -81,4 +83,5 @@ def run() -> list:
         # weak scaling: ideal == constant time; report parallel efficiency
         rows.append((f"weak_scaling_n{n}", us,
                      f"efficiency={base / us:.3f}"))
+    write_json("scaling", rows)
     return rows

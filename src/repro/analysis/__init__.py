@@ -17,9 +17,9 @@ walked over every Python file in the repo.
 * **R2** — operator implementations are reached through the backend
   registry (``register_backend`` / ``get_backend``), never hand-wired
   across module boundaries inside ``src/repro``.
-* **R3** — new callers configure via :mod:`repro.api` specs; calling the
-  deprecated ``solve_wilson_eo`` shim outside its own module and its
-  designated shim-parity tests (``tests/test_api.py``) is an error.
+* **R3** — the ``solve_wilson_eo`` shim was deleted at its PR 7
+  removal horizon; defining or referencing that name anywhere is an
+  error — callers configure via :mod:`repro.api` specs.
 * **R4** — no ``device_put`` / ``to_domain`` / layout-codec calls
   syntactically inside a Krylov ``while_loop`` body in
   ``core/solver.py`` (the conversion-free / placement-free hot loop).
@@ -44,6 +44,10 @@ real entry points.
   at exact byte boundaries (and the ring is T-independent).
 * **J4** — a replayed :class:`repro.api.SolveSession` scenario stays
   within its declared trace budget (no retrace regressions).
+* **J5** — the distributed ``overlap="interior"`` schedule keeps its
+  interior kernels independent of the in-flight halo ``ppermute``s
+  (taint propagation over the ``shard_map`` body jaxpr), so the
+  comms/compute overlap claim is structural, not a timing artifact.
 
 Run the gate::
 

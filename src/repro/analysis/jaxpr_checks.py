@@ -27,6 +27,15 @@ can see:
   scenario (repeat solves, a shape change, a spec change) performs
   exactly as many traces as distinct cache keys — the bind-once
   contract expressed as a hard number.
+* **J5 — comms/compute overlap schedule.**  The distributed operator
+  traced with ``overlap="interior"`` keeps its interior kernels
+  *independent* of the in-flight halo exchange: inside the
+  ``shard_map`` body, exactly 2 ``pallas_call``s (one interior pass per
+  hopping block) whose inputs are NOT data-dependent on any
+  ``ppermute`` result (checked by taint propagation over the body
+  jaxpr), with all four face exchanges per hop actually present.  A
+  refactor that re-serializes the exchange before the main kernel
+  shows up here, not in any timing noise.
 
 Every check takes injectable overrides (a wrapped ops factory, a
 replacement policy function, a sabotaged session factory) so the test
@@ -51,9 +60,10 @@ _ANCHORS = {
     "J2": ("src/repro/kernels/ops.py", "def apply_dhat_planar_any"),
     "J3": ("src/repro/kernels/wilson_stencil.py", "def fused_dhat_policy"),
     "J4": ("src/repro/api/session.py", "class SolveSession"),
+    "J5": ("src/repro/distributed/qcd.py", "def make_dhat_fn"),
 }
 
-ALL_JAXPR_CHECKS = ("J1", "J2", "J3", "J4")
+ALL_JAXPR_CHECKS = ("J1", "J2", "J3", "J4", "J5")
 
 _LATTICE = (4, 4, 4, 8)          # (X, Y, Z, T) — matches the test suite
 _KAPPA = 0.13
@@ -209,13 +219,21 @@ def check_conversion_free(root: str, *,
 EXPECTED_PALLAS_CALLS = {"resident": 1, "stream": 1, "unfused": 2}
 
 
+GAUGE_COMPRESSION_AXES = ("none", "two_row", "minimal")
+
+
 def check_pallas_counts(root: str, *,
                         apply_fn: Optional[Callable] = None,
-                        expected: Optional[dict] = None) -> List[Finding]:
+                        expected: Optional[dict] = None,
+                        compressions: Optional[Sequence[str]] = None,
+                        ) -> List[Finding]:
     """J2: each fused-policy branch launches its exact kernel count.
 
-    ``apply_fn(u_e_p, u_o_p, src_p, kappa, fused=...)`` overrides the
-    traced entry point so the self-tests can seed a double launch.
+    The counts must hold for every stored gauge representation (18/12/8
+    real link planes): in-register reconstruction may not add kernel
+    launches.  ``apply_fn(u_e_p, u_o_p, src_p, kappa, fused=...)``
+    overrides the traced entry point so the self-tests can seed a
+    double launch (``compressions`` narrows the sweep for those).
     """
     import jax
     from repro.kernels import layout
@@ -223,28 +241,38 @@ def check_pallas_counts(root: str, *,
 
     if expected is None:
         expected = EXPECTED_PALLAS_CALLS
+    if compressions is None:
+        compressions = GAUGE_COMPRESSION_AXES
     if apply_fn is None:
         def apply_fn(u_e_p, u_o_p, src_p, kappa, fused):
             return kops.apply_dhat_planar_any(
                 u_e_p, u_o_p, src_p, kappa, fused=fused, interpret=True)
 
     Ue, Uo, e, _ = _tiny_eo()
-    u_e_p, u_o_p = layout.gauge_to_planar(Ue), layout.gauge_to_planar(Uo)
+    u_e_18, u_o_18 = layout.gauge_to_planar(Ue), layout.gauge_to_planar(Uo)
     src_p = layout.spinor_to_planar(e)
 
     findings: List[Finding] = []
-    for branch, want in sorted(expected.items()):
-        jaxpr = jax.make_jaxpr(
-            lambda s: apply_fn(u_e_p, u_o_p, s, _KAPPA, branch))(src_p)
-        got = sum(1 for eqn in _walk_eqns(jaxpr)
-                  if eqn.primitive.name == "pallas_call")
-        if got != want:
-            findings.append(_finding(
-                root, "J2",
-                f"fused={branch!r}: one Dhat application traced to "
-                f"{got} pallas_call(s), expected exactly {want} — a "
-                "silent un-fusing (or double launch) changes the HBM "
-                "traffic story without failing any parity test"))
+    for compression in compressions:
+        if compression == "none":
+            u_e_p, u_o_p = u_e_18, u_o_18
+        else:
+            u_e_p = layout.gauge_compress_planar(u_e_18, compression)
+            u_o_p = layout.gauge_compress_planar(u_o_18, compression)
+        for branch, want in sorted(expected.items()):
+            jaxpr = jax.make_jaxpr(
+                lambda s: apply_fn(u_e_p, u_o_p, s, _KAPPA, branch))(src_p)
+            got = sum(1 for eqn in _walk_eqns(jaxpr)
+                      if eqn.primitive.name == "pallas_call")
+            if got != want:
+                findings.append(_finding(
+                    root, "J2",
+                    f"fused={branch!r} (gauge_compression="
+                    f"{compression!r}): one Dhat application traced to "
+                    f"{got} pallas_call(s), expected exactly {want} — a "
+                    "silent un-fusing (or double launch) changes the "
+                    "HBM traffic story without failing any parity "
+                    "test"))
     return findings
 
 
@@ -255,6 +283,7 @@ def check_vmem_model(root: str, *,
                      fits_fn: Optional[Callable] = None,
                      ring_fn: Optional[Callable] = None,
                      policy_fn: Optional[Callable] = None,
+                     headroom_fn: Optional[Callable] = None,
                      limit_bytes: Optional[int] = None) -> List[Finding]:
     """J3: the policy's byte math agrees with an independent estimate.
 
@@ -331,6 +360,56 @@ def check_vmem_model(root: str, *,
             "stream_ring_bytes grew with T — the plane-window ring is "
             "supposed to be T-independent (that is the VMEM cap-lift)"))
 
+    # Compressed-gauge headroom: storing 12/8 of 18 real link planes
+    # frees VMEM in the double-buffered gauge window (12 plane-sets in
+    # flight per grid step); fits/policy must extend the scratch budget
+    # by exactly that headroom — and gauge_comps=18 must be a strict
+    # no-op, so every boundary above stays where it was.
+    headroom = headroom_fn or ws.gauge_headroom_bytes
+    for gc in (18, 12, 8):
+        for dtype in (jnp.float32, jnp.bfloat16):
+            Y, Xh = 4, 4
+            itemsize = jnp.dtype(dtype).itemsize
+            want_head = (18 - gc) * 12 * 2 * Y * Xh * itemsize
+            got_head = headroom(Y, Xh, itemsize, gauge_comps=gc)
+            if got_head != want_head:
+                findings.append(_finding(
+                    root, "J3",
+                    f"gauge_headroom_bytes(Y={Y}, Xh={Xh}, "
+                    f"itemsize={itemsize}, gauge_comps={gc}) = "
+                    f"{got_head}, independent estimate {want_head} "
+                    f"((18-{gc}) planes x 12 plane-sets x 2 buffers)"))
+            lim_gc = limit + want_head
+            row = itemsize * 4 * 24 * Y * Xh       # one (Z=4) t-row
+            T_gc = lim_gc // row
+            for T in (T_gc, T_gc + 1):
+                shape = (T, 4, 24, Y, Xh)
+                resident = itemsize * math.prod(shape)
+                got_fits = ws.fused_dhat_fits(shape, dtype,
+                                              gauge_comps=gc)
+                if got_fits != (resident <= lim_gc):
+                    findings.append(_finding(
+                        root, "J3",
+                        f"fused_dhat_fits({shape}, "
+                        f"{jnp.dtype(dtype).name}, gauge_comps={gc}) = "
+                        f"{got_fits}, but resident {resident}B vs "
+                        f"limit+headroom {lim_gc}B says "
+                        f"{resident <= lim_gc}"))
+                ringsz = ring(shape, dtype)
+                want_policy = ("resident" if resident <= lim_gc else
+                               "stream" if ringsz <= lim_gc else
+                               "unfused")
+                got_policy = ws.fused_dhat_policy(shape, dtype,
+                                                  gauge_comps=gc)
+                if got_policy != want_policy:
+                    findings.append(_finding(
+                        root, "J3",
+                        f"fused_dhat_policy({shape}, "
+                        f"{jnp.dtype(dtype).name}, gauge_comps={gc}) = "
+                        f"{got_policy!r}, but the byte math (resident "
+                        f"{resident}B, ring {ringsz}B, limit+headroom "
+                        f"{lim_gc}B) says {want_policy!r}"))
+
     # The traffic model reports the same scratch numbers it budgets by.
     model = ws.dhat_stream_traffic_model(16, 8, 8, 4, nrhs=2)
     mring = ring((2, 16, 8, 24, 8, 4))
@@ -402,6 +481,143 @@ def check_retrace_budget(root: str, *,
     return findings
 
 
+# --- J5: comms/compute overlap schedule ------------------------------
+
+# One Dhat = two hopping blocks; each exchanges 4 spinor faces and
+# (without gauge hoisting) 4 gauge faces.
+_J5_MIN_PPERMUTES = 8
+_J5_EXPECTED_INTERIOR_KERNELS = 2
+
+
+def check_overlap_interleave(root: str, *,
+                             overlap: str = "interior",
+                             partition_factory: Optional[Callable] = None,
+                             ) -> List[Finding]:
+    """J5: ``overlap='interior'`` really decouples kernels from comms.
+
+    Traces the distributed Dhat (pallas local backend, 1-device mesh)
+    and inspects the ``shard_map`` body jaxpr: the halo ``ppermute``s
+    must be present (>= 8 — four faces per hopping block), exactly 2
+    ``pallas_call``s must launch (one interior pass per hopping block),
+    and every ``pallas_call`` must have at least 4 *already-issued*
+    ``ppermute``s it is NOT data-dependent on — the faces genuinely in
+    flight while it runs (established by forward dependency propagation
+    over the body's equations).  The per-kernel formulation matters:
+    the second hop's interior kernel legitimately depends on the FIRST
+    hop's exchange (through the hopping-block chain) — what it must not
+    depend on is its own.  The fused schedule fails (each kernel
+    consumes every face exchanged before it), which is the
+    seeded-violation self-test.
+
+    ``partition_factory() -> QCDPartition`` overrides the traced
+    configuration.
+    """
+    import jax
+    from jax import core as jcore
+    from repro import compat
+    from repro.distributed import qcd
+    from repro.kernels import layout
+
+    Ue, Uo, e, _ = _tiny_eo()
+    u_e_p, u_o_p = layout.gauge_to_planar(Ue), layout.gauge_to_planar(Uo)
+    src_p = layout.spinor_to_planar(e)
+
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    if partition_factory is None:
+        def partition_factory():
+            return qcd.QCDPartition.for_mesh(
+                mesh, backend="pallas", overlap=overlap, interpret=True)
+    part = partition_factory()
+    fn = qcd.make_dhat_fn(part, _KAPPA)
+    jaxpr = jax.make_jaxpr(fn)(u_e_p, u_o_p, src_p)
+
+    body = None
+    for eqn in _walk_eqns(jaxpr):
+        if eqn.primitive.name == "shard_map":
+            subs = [s for v in eqn.params.values() for s in _as_jaxprs(v)]
+            if subs:
+                body = subs[0]
+                break
+    if body is None:
+        return [_finding(
+            root, "J5",
+            "no shard_map equation in the traced distributed Dhat — "
+            "the operator is expected to run under shard_map")]
+    if isinstance(body, jcore.ClosedJaxpr):
+        body = body.jaxpr
+
+    def _counts(eqn):
+        """(ppermutes, pallas_calls) inside one equation (recursively)."""
+        pp = pc = 0
+        stack = [eqn]
+        while stack:
+            e_ = stack.pop()
+            if e_.primitive.name == "ppermute":
+                pp += 1
+            elif e_.primitive.name == "pallas_call":
+                pc += 1
+            for val in e_.params.values():
+                for sub in _as_jaxprs(val):
+                    sj = sub.jaxpr if isinstance(sub, jcore.ClosedJaxpr) \
+                        else sub
+                    stack.extend(sj.eqns)
+        return pp, pc
+
+    # Forward dependency propagation: deps[var] = set of ppermute ids
+    # (issue-ordered ints) the value is data-dependent on.
+    deps = {}
+    n_ppermute = 0
+    n_kernels = 0
+    serialized = []                 # (kernel index, overlapped faces)
+    for eqn in body.eqns:
+        in_deps = set()
+        for v in eqn.invars:
+            if getattr(v, "count", None) is not None:
+                in_deps |= deps.get(v, frozenset())
+        pp, pc = _counts(eqn)
+        for _ in range(pc):
+            # Faces already in flight that this kernel does NOT wait
+            # on: every earlier-issued ppermute outside its dep set.
+            overlapped = n_ppermute - len(in_deps)
+            if overlapped < 4:
+                serialized.append((n_kernels, overlapped))
+            n_kernels += 1
+        if pp:
+            in_deps = in_deps | set(range(n_ppermute, n_ppermute + pp))
+            n_ppermute += pp
+        if in_deps:
+            frozen = frozenset(in_deps)
+            for v in eqn.outvars:
+                deps[v] = frozen
+
+    findings: List[Finding] = []
+    if n_ppermute < _J5_MIN_PPERMUTES:
+        findings.append(_finding(
+            root, "J5",
+            f"overlap={overlap!r}: only {n_ppermute} ppermute(s) in the "
+            f"shard_map body, expected >= {_J5_MIN_PPERMUTES} (4 faces "
+            "per hopping block, 2 hopping blocks per Dhat) — the halo "
+            "exchange went missing"))
+    if serialized:
+        detail = ", ".join(f"kernel {i}: {n} face(s) in flight"
+                           for i, n in serialized)
+        findings.append(_finding(
+            root, "J5",
+            f"overlap={overlap!r}: {len(serialized)} pallas_call(s) "
+            "have fewer than 4 already-issued ppermutes outside their "
+            f"dependency set ({detail}) — the main kernel is "
+            "serialized behind the halo exchange instead of "
+            "overlapping with it"))
+    if n_kernels != _J5_EXPECTED_INTERIOR_KERNELS:
+        findings.append(_finding(
+            root, "J5",
+            f"overlap={overlap!r}: {n_kernels} pallas_call(s) in the "
+            f"shard_map body, expected exactly "
+            f"{_J5_EXPECTED_INTERIOR_KERNELS} (one interior pass per "
+            "hopping block)"))
+    return findings
+
+
 # --- runner entry -----------------------------------------------------
 
 _CHECK_FNS = {
@@ -409,6 +625,7 @@ _CHECK_FNS = {
     "J2": check_pallas_counts,
     "J3": check_vmem_model,
     "J4": check_retrace_budget,
+    "J5": check_overlap_interleave,
 }
 
 

@@ -1,15 +1,15 @@
-"""R3 — new callers configure via ``repro.api`` specs, not the shim.
+"""R3 — the ``solve_wilson_eo`` shim is gone; callers use ``repro.api``.
 
-``solve_wilson_eo`` is a deprecation shim (removal horizon: PR 7); it
-rebinds the backend — re-planarizing and re-placing the gauge — on
-every call, which is exactly the per-call cost the bind-once API
-exists to eliminate.  Any reference outside the shim's own module (and
-the re-export in ``core/__init__.py``, which is itself part of the
-deprecated surface) or its designated shim-parity tests means a PR 7
-removal would not be a pure deletion.
+``solve_wilson_eo`` was a deprecation shim over the bind-once public
+API; PR 7 (its announced removal horizon) deleted it.  The rule now
+enforces the *post-removal* invariant: the name must not exist — not as
+a definition, an import, or a reference — anywhere in the repo.  A
+reintroduction would resurrect the kwarg-sprawl surface (and its
+rebind-the-backend-per-call cost) that ``repro.api.WilsonMatrix`` /
+``SolveSession`` replaced.
 
 Docstring mentions don't trip this rule — it is AST-based, so only
-actual name loads/imports/calls count.
+actual definitions, name loads, imports, and calls count.
 """
 from __future__ import annotations
 
@@ -17,41 +17,37 @@ import ast
 from typing import Iterable
 
 RULE_ID = "R3"
-DESCRIPTION = ("the deprecated solve_wilson_eo shim is only referenced "
-               "from its own module and the designated shim-parity "
-               "tests; everyone else goes through repro.api")
+DESCRIPTION = ("the removed solve_wilson_eo shim must not exist or be "
+               "referenced anywhere; everyone goes through repro.api")
 
 SHIM_NAME = "solve_wilson_eo"
 
-# The shim's home (definition + package re-export of the deprecated
-# surface) and the single designated shim-parity test file — the one
-# place PR 7 deletes alongside the shim itself.
-ALLOWED_PATHS = frozenset({
-    "src/repro/core/solver.py",
-    "src/repro/core/__init__.py",
-    "tests/test_api.py",
-})
-
 
 def check(ctx) -> Iterable:
-    if ctx.path in ALLOWED_PATHS:
-        return
     for node in ast.walk(ctx.tree):
-        if isinstance(node, ast.ImportFrom):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name == SHIM_NAME:
+                yield ctx.finding(
+                    RULE_ID, node,
+                    f"definition of removed {SHIM_NAME!r}: the shim was "
+                    "deleted at its PR 7 horizon — bind once with "
+                    "repro.api.WilsonMatrix and solve through "
+                    "SolveSession (see README 'Public API')")
+        elif isinstance(node, ast.ImportFrom):
             for a in node.names:
                 if a.name == SHIM_NAME:
                     yield ctx.finding(
                         RULE_ID, node,
-                        f"import of deprecated {SHIM_NAME!r}: bind once "
+                        f"import of removed {SHIM_NAME!r}: bind once "
                         "with repro.api.WilsonMatrix and solve through "
                         "SolveSession (see README 'Public API')")
         elif isinstance(node, ast.Attribute) and node.attr == SHIM_NAME:
             yield ctx.finding(
                 RULE_ID, node,
-                f"call of deprecated {SHIM_NAME!r}: bind once with "
+                f"call of removed {SHIM_NAME!r}: bind once with "
                 "repro.api.WilsonMatrix and solve through SolveSession "
                 "(see README 'Public API')")
         elif isinstance(node, ast.Name) and node.id == SHIM_NAME:
             yield ctx.finding(
                 RULE_ID, node,
-                f"reference to deprecated {SHIM_NAME!r}: use repro.api")
+                f"reference to removed {SHIM_NAME!r}: use repro.api")

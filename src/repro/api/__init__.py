@@ -27,9 +27,9 @@ One-shot convenience::
                             backend=api.BackendSpec("pallas_fused"),
                             spec=api.SolveSpec(method="bicgstab"))
 
-The legacy ``repro.core.solver.solve_wilson_eo`` survives as a thin
-deprecation shim over exactly this path (removal horizon: two PRs
-after this package's introduction).
+The legacy ``solve_wilson_eo`` entry point is gone — it reached its
+removal horizon (two PRs after this package's introduction) and lint
+rule R3 keeps any definition or reference from coming back.
 """
 from __future__ import annotations
 

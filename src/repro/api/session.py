@@ -76,8 +76,7 @@ class SolveSession:
 
     def solve(self, eta_e, eta_o, spec: Optional[SolveSpec] = None):
         """Solve ``D_W xi = eta`` for one source pair (or a leading-axis
-        RHS block); returns ``(xi_e, xi_o, result)`` exactly like the
-        legacy ``solve_wilson_eo``."""
+        RHS block); returns ``(xi_e, xi_o, result)``."""
         spec = self.default_spec if spec is None else spec
         if self.matrix.lattice is not None:
             batched = spec.validate_rhs(eta_e, eta_o, self.matrix.lattice)

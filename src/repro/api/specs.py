@@ -1,8 +1,8 @@
 """Validated spec dataclasses — the public configuration surface.
 
 Three frozen (hashable) dataclasses replace the ~10-kwarg sprawl that
-the CLI, examples, and benchmarks each used to hand-wire into
-``solve_wilson_eo``:
+the CLI, examples, and benchmarks each used to hand-wire into the old
+one-shot solver entry point:
 
 * :class:`LatticeSpec`   — the lattice geometry (extents, even-odd
   half-extent) and the shapes derived from it;
@@ -114,7 +114,10 @@ class BackendSpec:
     or ``"auto"`` (``pallas_fused`` on TPU, ``jnp`` elsewhere);
     ``dtype`` the planar compute dtype (``"f32"``/``"bf16"``/``"f64"``)
     for backends that take one; ``interpret`` forces/disables the Pallas
-    interpreter (``None`` = auto off-TPU); ``opts`` is a tuple of extra
+    interpreter (``None`` = auto off-TPU); ``gauge_compression`` selects
+    the stored SU(3) link representation (``"none"`` | ``"two_row"`` |
+    ``"minimal"`` — 18/12/8 real planes per link, reconstructed
+    in-register by the kernels); ``opts`` is a tuple of extra
     ``(key, value)`` pairs forwarded verbatim to the factory (values
     must be hashable — the spec is jit-cache aux data).
 
@@ -127,11 +130,18 @@ class BackendSpec:
     name: str = "auto"
     dtype: Optional[str] = None
     interpret: Optional[bool] = None
+    gauge_compression: str = "none"
     opts: Tuple[Tuple[str, object], ...] = ()
 
     def __post_init__(self):
         object.__setattr__(self, "opts", tuple(
             (str(k), v) for k, v in self.opts))
+        gc = str(self.gauge_compression or "none")
+        if gc not in ("none", "two_row", "minimal"):
+            raise ValueError(
+                f"unknown gauge_compression {self.gauge_compression!r}; "
+                "choose from ('none', 'two_row', 'minimal')")
+        object.__setattr__(self, "gauge_compression", gc)
         if self.dtype is not None:
             norm = _DTYPE_ALIASES.get(str(self.dtype).lower())
             if norm is None:
@@ -178,6 +188,12 @@ class BackendSpec:
             raise ValueError(
                 f"backend {name!r} has no interpret mode; drop "
                 f"BackendSpec.interpret [capabilities: {caps}]")
+        if (self.gauge_compression != "none"
+                and self.gauge_compression not in caps.gauge_compressions):
+            raise ValueError(
+                f"backend {name!r} does not support gauge_compression "
+                f"{self.gauge_compression!r}; supported: "
+                f"{caps.gauge_compressions} [capabilities: {caps}]")
         return dataclasses.replace(self, name=name)
 
     @property
@@ -191,6 +207,8 @@ class BackendSpec:
             out["dtype"] = _DTYPE_JNP[self.dtype]
         if self.interpret is not None:
             out["interpret"] = self.interpret
+        if self.gauge_compression != "none":
+            out["gauge_compression"] = self.gauge_compression
         return out
 
 

@@ -248,6 +248,10 @@ class BackendCapabilities:
     * ``policies`` — the fused-Dhat execution paths the backend can take
       per application (policy introspection; ``"auto"`` means it picks
       among the others by VMEM footprint).
+    * ``gauge_compressions`` — SU(3) link storage representations the
+      factory's ``gauge_compression=`` knob accepts (``"none"`` full
+      18-real links; ``"two_row"`` 12-real; ``"minimal"`` 8-real —
+      compressed planes are expanded in-register by the kernels).
     """
 
     name: str
@@ -257,6 +261,7 @@ class BackendCapabilities:
     dtypes: tuple = ()
     supports_interpret: bool = False
     policies: tuple = ()
+    gauge_compressions: tuple = ("none",)
     description: str = ""
 
 

@@ -70,9 +70,17 @@ def make_jnp_backend(U_e, U_o, **_unused) -> WilsonOps:
         domain="complex")
 
 
-def _pallas_prepare_gauge(U_e, U_o, *, dtype=jnp.float32, **_unused):
-    """Bind-once layout conversion of the pallas-family backends."""
-    return ops.make_planar_fields(U_e, U_o, dtype=dtype)
+def _pallas_prepare_gauge(U_e, U_o, *, dtype=jnp.float32,
+                          gauge_compression: str = "none", **_unused):
+    """Bind-once layout conversion of the pallas-family backends.
+
+    ``gauge_compression`` selects the stored link representation ("none"
+    | "two_row" | "minimal"); the compressed planes are what lives in
+    the ``WilsonMatrix`` pytree leaves (~33%/55% fewer gauge bytes) and
+    the kernels expand them in-register.
+    """
+    return ops.make_planar_fields(U_e, U_o, dtype=dtype,
+                                  compression=gauge_compression)
 
 
 def _make_pallas_from_planar(u_e_p, u_o_p, *, fused,
@@ -115,8 +123,10 @@ def _make_pallas_from_planar(u_e_p, u_o_p, *, fused,
 
 
 def _make_pallas(U_e, U_o, *, fused, interpret: Optional[bool] = None,
-                 name: str, dtype=jnp.float32) -> WilsonOps:
-    u_e_p, u_o_p = _pallas_prepare_gauge(U_e, U_o, dtype=dtype)
+                 name: str, dtype=jnp.float32,
+                 gauge_compression: str = "none") -> WilsonOps:
+    u_e_p, u_o_p = _pallas_prepare_gauge(
+        U_e, U_o, dtype=dtype, gauge_compression=gauge_compression)
     return _make_pallas_from_planar(u_e_p, u_o_p, fused=fused,
                                     interpret=interpret, name=name)
 
@@ -132,18 +142,21 @@ def _pallas_native_factory(fused, name):
 
 
 def make_pallas_backend(U_e, U_o, *, interpret=None, dtype=jnp.float32,
-                        **_unused) -> WilsonOps:
+                        gauge_compression="none", **_unused) -> WilsonOps:
     """Planar Pallas stencil, one ``pallas_call`` per hopping block.
 
     ``dtype`` sets the planar compute dtype (f32 default; bf16 for the
-    mixed-precision inner solve).
+    mixed-precision inner solve).  ``gauge_compression`` stores 12-real
+    (two_row) or 8-real (minimal) links, expanded in-register.
     """
     return _make_pallas(U_e, U_o, fused=False, interpret=interpret,
-                        name="pallas", dtype=dtype)
+                        name="pallas", dtype=dtype,
+                        gauge_compression=gauge_compression)
 
 
 def make_pallas_fused_backend(U_e, U_o, *, interpret=None,
-                              dtype=jnp.float32, **_unused) -> WilsonOps:
+                              dtype=jnp.float32, gauge_compression="none",
+                              **_unused) -> WilsonOps:
     """Dhat as a single fused kernel; intermediate never touches HBM.
 
     Auto-selects the three-way fused policy (``fused=None`` in
@@ -154,11 +167,13 @@ def make_pallas_fused_backend(U_e, U_o, *, interpret=None,
     and the two-kernel path as the last silent-correct fallback.
     """
     return _make_pallas(U_e, U_o, fused=None, interpret=interpret,
-                        name="pallas_fused", dtype=dtype)
+                        name="pallas_fused", dtype=dtype,
+                        gauge_compression=gauge_compression)
 
 
 def make_pallas_fused_stream_backend(U_e, U_o, *, interpret=None,
                                      dtype=jnp.float32,
+                                     gauge_compression="none",
                                      **_unused) -> WilsonOps:
     """Streaming plane-window fused Dhat, forced (no auto-policy).
 
@@ -171,7 +186,23 @@ def make_pallas_fused_stream_backend(U_e, U_o, *, interpret=None,
     overhead); the ``pallas_fused`` backend auto-picks between the two.
     """
     return _make_pallas(U_e, U_o, fused="stream", interpret=interpret,
-                        name="pallas_fused_stream", dtype=dtype)
+                        name="pallas_fused_stream", dtype=dtype,
+                        gauge_compression=gauge_compression)
+
+
+def _normalize_overlap(overlap):
+    """Accept the boolean comms/compute-overlap knob.
+
+    ``True`` means "overlap the halo exchange with interior compute" —
+    the ``"interior"`` mode of :mod:`repro.distributed.qcd`; ``False``
+    means the serialized batched exchange (``"fused"``).  String modes
+    pass through.
+    """
+    if overlap is True:
+        return "interior"
+    if overlap is False:
+        return "fused"
+    return overlap
 
 
 def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
@@ -179,6 +210,7 @@ def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
                              overlap: str = "fused",
                              interpret: Optional[bool] = None,
                              dtype=jnp.float32,
+                             gauge_compression: str = "none",
                              **_unused) -> WilsonOps:
     """shard_map'd operator over a device mesh.
 
@@ -196,11 +228,22 @@ def make_distributed_backend(U_e, U_o, *, partition=None, mesh=None,
     pure-XLA stencil — so the per-rank compute is conversion-free too;
     ``"jnp"`` (complex round-trip inside the shard, the old default) and
     ``"pallas"`` remain selectable.
+
+    ``overlap`` picks the halo/stencil schedule: ``"fused"`` (default,
+    one batched exchange serialized against the full stencil),
+    ``"interior"`` (issue the exchange first and run the interior
+    stencil while it is in flight — the comms/compute-overlap mode; also
+    selectable as ``overlap=True``), or ``"split"`` (legacy recompute
+    split).  ``gauge_compression`` stores AND ships compressed links:
+    the halo exchange moves the compressed planes, so gauge halo traffic
+    shrinks with the storage (~33% two_row / ~55% minimal).
     """
+    overlap = _normalize_overlap(overlap)
     u_e_p, u_o_p = _distributed_prepare_gauge(
         U_e, U_o, partition=partition, mesh=mesh,
         local_backend=local_backend, overlap=overlap,
-        interpret=interpret, dtype=dtype)
+        interpret=interpret, dtype=dtype,
+        gauge_compression=gauge_compression)
     return _make_distributed_from_planar(
         u_e_p, u_o_p, partition=partition, mesh=mesh,
         local_backend=local_backend, overlap=overlap, interpret=interpret)
@@ -217,6 +260,7 @@ def _resolve_partition(partition, mesh, local_backend, overlap, interpret):
 
     if partition is not None:
         return partition
+    overlap = _normalize_overlap(overlap)
     key = (mesh if mesh is not None else ("default", jax.device_count()),
            local_backend, overlap, interpret)
     if key not in _PARTITION_MEMO:
@@ -233,12 +277,20 @@ def _resolve_partition(partition, mesh, local_backend, overlap, interpret):
 def _distributed_prepare_gauge(U_e, U_o, *, partition=None, mesh=None,
                                local_backend: str = "jnp_planar",
                                overlap: str = "fused", interpret=None,
-                               dtype=jnp.float32, **_unused):
-    """Bind-once gauge work of the distributed backend: planarize AND
-    place on the device mesh."""
+                               dtype=jnp.float32,
+                               gauge_compression: str = "none",
+                               **_unused):
+    """Bind-once gauge work of the distributed backend: planarize,
+    optionally compress, AND place on the device mesh.
+
+    Compression happens *before* placement, so the mesh-resident leaves
+    — and every halo exchange of gauge planes derived from them — carry
+    the compressed representation.
+    """
     partition = _resolve_partition(partition, mesh, local_backend,
                                    overlap, interpret)
-    u_e_p, u_o_p = ops.make_planar_fields(U_e, U_o, dtype=dtype)
+    u_e_p, u_o_p = ops.make_planar_fields(U_e, U_o, dtype=dtype,
+                                          compression=gauge_compression)
     u_e_p = jax.device_put(u_e_p, partition.gauge_sharding())
     u_o_p = jax.device_put(u_o_p, partition.gauge_sharding())
     return u_e_p, u_o_p
@@ -255,6 +307,7 @@ def _make_distributed_from_planar(u_e_p, u_o_p, *, partition=None,
     del dtype  # baked into the planar leaves
     from repro.distributed import qcd
 
+    overlap = _normalize_overlap(overlap)
     partition = _resolve_partition(partition, mesh, local_backend,
                                    overlap, interpret)
     sp_shard = partition.spinor_sharding()
@@ -318,6 +371,8 @@ def _make_distributed_from_planar(u_e_p, u_o_p, *, partition=None,
             apply_dhat_batched))
 
 
+_GAUGE_COMPRESSIONS = ("none", "two_row", "minimal")
+
 _PALLAS_DTYPES = ("f32", "bf16", "f64")
 
 register_backend(
@@ -337,6 +392,7 @@ register_backend(
         name="pallas", domain="planar", gauge_form="planar",
         batched_kernels=True, dtypes=_PALLAS_DTYPES,
         supports_interpret=True, policies=("unfused",),
+        gauge_compressions=_GAUGE_COMPRESSIONS,
         description="planar Pallas stencil, one kernel per hopping "
                     "block (two kernels per Dhat)"),
     native_factory=_pallas_native_factory(False, "pallas"),
@@ -348,6 +404,7 @@ register_backend(
         batched_kernels=True, dtypes=_PALLAS_DTYPES,
         supports_interpret=True,
         policies=("auto", "resident", "stream", "unfused"),
+        gauge_compressions=_GAUGE_COMPRESSIONS,
         description="Dhat as ONE kernel; three-way auto policy sized by "
                     "dtype and nrhs (resident VMEM scratch -> streaming "
                     "plane window -> two-kernel fallback)"),
@@ -359,6 +416,7 @@ register_backend(
         name="pallas_fused_stream", domain="planar", gauge_form="planar",
         batched_kernels=True, dtypes=_PALLAS_DTYPES,
         supports_interpret=True, policies=("stream",),
+        gauge_compressions=_GAUGE_COMPRESSIONS,
         description="streaming plane-window fused Dhat, forced: VMEM "
                     "holds a 4-row ring of odd-intermediate t-planes "
                     "(no T-dependent volume cap)"),
@@ -370,10 +428,14 @@ register_backend(
         name="distributed", domain="planar_sharded",
         gauge_form="planar_sharded", batched_kernels=True,
         dtypes=_PALLAS_DTYPES, supports_interpret=True,
-        policies=("local:jnp_planar", "local:jnp", "local:pallas"),
+        policies=("local:jnp_planar", "local:jnp", "local:pallas",
+                  "overlap:fused", "overlap:interior",
+                  "overlap:split"),
+        gauge_compressions=_GAUGE_COMPRESSIONS,
         description="shard_map over a device mesh with z/t halo "
                     "exchange; gauge placed once at bind, one batched "
-                    "exchange per RHS block"),
+                    "exchange per RHS block (overlappable with the "
+                    "interior stencil; links shippable compressed)"),
     native_factory=lambda gauge, **opts: _make_distributed_from_planar(
         *gauge, **opts),
     prepare_gauge=_distributed_prepare_gauge)

@@ -16,4 +16,4 @@ from .wilson import apply_wilson, apply_wilson_dagger, hop, DW_FLOPS_PER_SITE
 from .evenodd import (EVEN, ODD, pack, unpack, pack_gauge, eo_shift,
                       hop_oe, hop_eo, apply_dhat, apply_dhat_dagger,
                       apply_wilson_eo)
-from .solver import cg, cgnr, bicgstab, solve_wilson_eo, SolveResult
+from .solver import cg, cgnr, bicgstab, SolveResult

@@ -14,13 +14,14 @@ Two production features beyond the single-RHS f32 path:
   with *per-column* Krylov scalars and a per-column convergence mask:
   converged columns freeze (their updates are zeroed) while the loop runs
   until every column converged or ``max_iters``.
-* **Mixed-precision iterative refinement** — ``solve_wilson_eo(...,
-  inner_dtype="f32")`` runs the Krylov iteration in a cheap inner dtype
-  (f32 default, bf16 optional) and wraps it in an f64 outer loop: true
-  residual recomputed in f64, correction solved in the inner dtype,
-  repeat until the *f64* tolerance is met.  The expensive f64 operator is
-  applied once per outer pass instead of twice per Krylov iteration —
-  the QWS / Kanamori-Matsufuru single-precision-inner strategy.
+* **Mixed-precision iterative refinement** — :func:`make_refined_solve`
+  (``SolveSpec(inner_dtype="f32")`` through the public API) runs the
+  Krylov iteration in a cheap inner dtype (f32 default, bf16 optional)
+  and wraps it in an f64 outer loop: true residual recomputed in f64,
+  correction solved in the inner dtype, repeat until the *f64* tolerance
+  is met.  The expensive f64 operator is applied once per outer pass
+  instead of twice per Krylov iteration — the QWS / Kanamori-Matsufuru
+  single-precision-inner strategy.
 * **Compensated (f32-accumulate) reductions** — Krylov scalars of bf16
   vector domains are accumulated in f32 and cast back down at the axpy
   (see :data:`COMPENSATED_REDUCTIONS`), so ``inner_dtype="bf16"``
@@ -29,8 +30,7 @@ Two production features beyond the single-RHS f32 path:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -156,21 +156,6 @@ class RefinedResult(NamedTuple):
     outer_iterations: int
     f64_applies: int
     inner_iterations: int
-
-
-@dataclasses.dataclass(frozen=True)
-class SolverConfig:
-    tol: float = 1e-6
-    max_iters: int = 1000
-    # Check-pointed restart support: residual recomputed from scratch
-    # every ``recompute_every`` iterations to bound drift (0 = never).
-    recompute_every: int = 0
-    # Mixed-precision iterative refinement (None = single-precision
-    # solve as before).  "f32" or "bf16"; requires jax x64 for the
-    # outer residual.
-    inner_dtype: Optional[str] = None
-    inner_tol: float = 1e-4     # per-pass reduction target of the inner solve
-    max_outer: int = 25
 
 
 def cg(op: Callable, b, x0=None, *, tol: float = 1e-6, max_iters: int = 1000,
@@ -545,161 +530,6 @@ def make_native_solve(bops, kappa, *, method: str = "cgnr",
     return solve_native
 
 
-# The one-shot-session shim warns once per process, not once per call
-# site: the legacy entry point is exercised hundreds of times by the
-# deprecation-guard tests and benches.
-_DEPRECATION_WARNED = False
-
-
-def _warn_deprecated():
-    global _DEPRECATION_WARNED
-    if _DEPRECATION_WARNED:
-        return
-    _DEPRECATION_WARNED = True
-    import warnings
-    warnings.warn(
-        "solve_wilson_eo is deprecated and will be removed two PRs "
-        "after the repro.api introduction: bind the gauge once with "
-        "repro.api.WilsonMatrix and solve through repro.api.SolveSession "
-        "(see README 'Public API' for the kwarg -> spec migration table)",
-        DeprecationWarning, stacklevel=3)
-
-
-def solve_wilson_eo(U_e, U_o, eta_e, eta_o, kappa, *, method: str = "cgnr",
-                    tol: float = 1e-6, max_iters: int = 2000,
-                    recompute_every: int = 0, config: SolverConfig = None,
-                    inner_dtype=None, inner_tol: float = 1e-4,
-                    max_outer: int = 25,
-                    apply_dhat_fn=None, apply_dhat_dag_fn=None,
-                    hop_oe_fn=None, hop_eo_fn=None,
-                    backend=None, backend_opts=None):
-    """Solve ``D_W xi = eta`` via the even-odd Schur system (Eqs. 4-5).
-
-    .. deprecated::
-        This kwarg-sprawl entry point is now a thin shim over the public
-        object API — it builds a one-shot
-        :class:`repro.api.WilsonMatrix` + :class:`repro.api.SolveSession`
-        per call, re-binding the backend (re-planarizing/re-placing the
-        gauge) every time.  Callers solving repeatedly should bind once
-        and reuse the session, which also caches the compiled solve per
-        ``(SolveSpec, rhs shape)``.  Emits a ``DeprecationWarning`` once
-        per process; removal horizon: two PRs after the ``repro.api``
-        introduction (see README "Public API" for the migration table).
-
-    ``method`` is one of :data:`KRYLOV_METHODS` (``"cg"`` = CG on the
-    normal equations without cgnr's extra true-residual pass).
-
-    Returns ``(xi_e, xi_o, SolveResult)``.  For the Wilson matrix
-    ``D_ee = D_oo = 1`` so the reconstruction is Eq. (5) with trivial
-    inverses.
-
-    The operator implementation is chosen by ``backend`` — a name from
-    :mod:`repro.backends` (``"jnp"``, ``"pallas"``, ``"pallas_fused"``,
-    ``"distributed"``; ``backend_opts`` are forwarded to the factory) or
-    an already-bound :class:`repro.backends.WilsonOps` (so callers
-    solving repeatedly against one gauge field bind once, keeping jit
-    caches and the planarized gauge warm across solves).
-
-    With a backend, the whole Krylov iteration runs in the backend's
-    *native* vector domain: the sources are encoded once via
-    ``bops.to_domain``, every iteration applies the native operators
-    (planar, sharded-planar, ...) with zero per-iteration layout
-    conversion or device placement, and the solution is decoded once at
-    exit.  Explicitly passed ``*_fn`` callables win over the backend and
-    keep the old complex-interface hand-wiring (and its per-call
-    conversion cost) available.
-
-    **Multi-RHS:** sources with a leading batch axis —
-    ``eta_* : (nrhs, T, Z, Y, Xh, 4, 3)`` — run the batched pipeline:
-    one batched encode, batched native operators (the Pallas kernels
-    load each gauge plane once per grid step for the whole block; the
-    distributed operator does one batched halo exchange), and a batched
-    Krylov solve whose converged columns freeze individually.  The
-    returned :class:`SolveResult` fields are then per-column arrays.
-
-    **Mixed precision:** ``inner_dtype`` (``"f32"``/``"bf16"``, or via
-    ``config``) switches to iterative refinement — inner Krylov solves
-    in that dtype, outer f64 true-residual loop until the f64 ``tol`` is
-    met (requires jax x64).  Returns a :class:`RefinedResult`.
-
-    ``config`` (a :class:`SolverConfig`) supplies ``tol`` / ``max_iters``
-    / ``recompute_every`` / ``inner_dtype`` / ``inner_tol`` /
-    ``max_outer`` in one object; individual keywords are ignored when it
-    is given.
-    """
-    from . import evenodd  # local import to avoid cycle
-    from repro import backends as backends_lib  # avoid import cycle
-
-    _warn_deprecated()
-
-    if config is not None:
-        tol, max_iters = config.tol, config.max_iters
-        recompute_every = config.recompute_every
-        inner_dtype = config.inner_dtype
-        inner_tol, max_outer = config.inner_tol, config.max_outer
-
-    batched = eta_e.ndim == 7
-
-    if inner_dtype is not None:
-        if (apply_dhat_fn or apply_dhat_dag_fn or hop_oe_fn or hop_eo_fn):
-            raise ValueError(
-                "inner_dtype (mixed-precision refinement) rebuilds the "
-                "Wilson operator from the gauge field and cannot honor "
-                "explicit *_fn operator overrides; pass a backend "
-                "name/WilsonOps instead")
-        return _solve_wilson_eo_refined(
-            U_e, U_o, eta_e, eta_o, kappa, method=method, tol=tol,
-            max_iters=max_iters, recompute_every=recompute_every,
-            inner_dtype=inner_dtype, inner_tol=inner_tol,
-            max_outer=max_outer, batched=batched,
-            backend=backend, backend_opts=backend_opts)
-
-    explicit = (apply_dhat_fn or apply_dhat_dag_fn
-                or hop_oe_fn or hop_eo_fn)
-    bops = None
-    if backend is not None:
-        bops = (backend if isinstance(backend, backends_lib.WilsonOps)
-                else backends_lib.make_wilson_ops(
-                    backend, U_e, U_o, **(backend_opts or {})))
-    if explicit or bops is None:
-        # Legacy hand-wiring: synthesize an identity-domain WilsonOps
-        # from the explicit *_fn callables (falling back to the backend's
-        # complex interface, then to the evenodd reference ops), so both
-        # wirings run through the one solve implementation below.
-        if bops is not None:
-            cops = bops
-            hop_oe_fn = hop_oe_fn or (lambda ue, uo, p: cops.hop_oe(p))
-            hop_eo_fn = hop_eo_fn or (lambda ue, uo, p: cops.hop_eo(p))
-            apply_dhat_fn = apply_dhat_fn or (
-                lambda v: cops.apply_dhat(v, kappa))
-            apply_dhat_dag_fn = apply_dhat_dag_fn or (
-                lambda v: cops.apply_dhat_dagger(v, kappa))
-        hop_oe_fn = hop_oe_fn or evenodd.hop_oe
-        hop_eo_fn = hop_eo_fn or evenodd.hop_eo
-        dhat = apply_dhat_fn or (lambda v: evenodd.apply_dhat(
-            U_e, U_o, v, kappa, hop_oe_fn, hop_eo_fn))
-        dhat_dag = apply_dhat_dag_fn or (
-            lambda v: evenodd.apply_dhat_dagger(
-                U_e, U_o, v, kappa, hop_oe_fn, hop_eo_fn))
-        bops = backends_lib.WilsonOps(
-            backend="explicit",
-            hop_oe=lambda p: hop_oe_fn(U_e, U_o, p),
-            hop_eo=lambda p: hop_eo_fn(U_e, U_o, p),
-            apply_dhat=lambda v, _k: dhat(v),
-            apply_dhat_dagger=lambda v, _k: dhat_dag(v))
-
-    # Thin shim over the public API: wrap the bound ops in a one-shot
-    # WilsonMatrix + SolveSession, so both the legacy kwarg surface and
-    # repro.api run the exact same pipeline (encode once, jitted native
-    # Krylov iteration, decode once).
-    from repro import api  # local import: api sits above core
-
-    matrix = api.WilsonMatrix.from_ops(bops, kappa, gauge=(U_e, U_o))
-    spec = api.SolveSpec(method=method, tol=tol, max_iters=max_iters,
-                         recompute_every=recompute_every)
-    return api.SolveSession(matrix).solve(eta_e, eta_o, spec)
-
-
 def make_refined_solve(bops, U64_e, U64_o, kappa, *, method: str = "cgnr",
                        tol: float = 1e-10, max_iters: int = 2000,
                        recompute_every: int = 0, inner_tol: float = 1e-4,
@@ -806,46 +636,3 @@ def make_refined_solve(bops, U64_e, U64_o, kappa, *, method: str = "cgnr",
             f64_applies=f64_applies, inner_iterations=inner_iters)
 
     return refined
-
-
-def resolve_inner_backend(U_e, U_o, inner_dtype, backend, backend_opts):
-    """Bind the *inner* backend of a mixed-precision solve at the inner
-    dtype (shared by the legacy shim and :class:`repro.api.SolveSession`).
-
-    Planar backends re-planarize the gauge once at that dtype; the jnp
-    backend has no planar dtype, so its gauge is downcast to complex64 —
-    otherwise a complex128 gauge would promote every inner iteration
-    back to f64 arithmetic and the refinement would save nothing.  (bf16
-    has no complex counterpart: through jnp the inner solve runs at f32.)
-    An already-bound :class:`~repro.backends.WilsonOps` is used as-is —
-    the caller bound it at the dtype they meant.
-    """
-    from repro import backends as backends_lib
-
-    idt = resolve_inner_dtype(inner_dtype)
-    if backend is None:
-        backend = "jnp"
-    if isinstance(backend, backends_lib.WilsonOps):
-        return backend
-    opts = dict(backend_opts or {})
-    if backend == "jnp":
-        return backends_lib.make_wilson_ops(
-            backend, U_e.astype(jnp.complex64),
-            U_o.astype(jnp.complex64), **opts)
-    opts.setdefault("dtype", idt)
-    return backends_lib.make_wilson_ops(backend, U_e, U_o, **opts)
-
-
-def _solve_wilson_eo_refined(U_e, U_o, eta_e, eta_o, kappa, *, method,
-                             tol, max_iters, recompute_every, inner_dtype,
-                             inner_tol, max_outer, batched,
-                             backend, backend_opts):
-    """Legacy one-shot entry: bind the inner backend, build the refined
-    solve, run it once (see :func:`make_refined_solve`)."""
-    bops = resolve_inner_backend(U_e, U_o, inner_dtype, backend,
-                                 backend_opts)
-    fn = make_refined_solve(
-        bops, U_e, U_o, kappa, method=method, tol=tol,
-        max_iters=max_iters, recompute_every=recompute_every,
-        inner_tol=inner_tol, max_outer=max_outer, batched=batched)
-    return fn(eta_e, eta_o)

@@ -37,6 +37,64 @@ def unit_gauge(lat_shape: Sequence[int], dtype=jnp.complex64) -> jnp.ndarray:
     return jnp.broadcast_to(eye, (NDIM, *lat_shape, 3, 3))
 
 
+def compress_two_row(U: jnp.ndarray) -> jnp.ndarray:
+    """Keep the first two rows: ``(..., 3, 3)`` -> ``(..., 2, 3)``.
+
+    12 real numbers per link instead of 18. Exact for any SU(3) matrix:
+    the third row is ``conj(a x b)`` (see :func:`reconstruct_two_row`).
+    """
+    return U[..., :2, :]
+
+
+def reconstruct_two_row(W: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`compress_two_row`: ``(..., 2, 3)`` -> ``(..., 3, 3)``."""
+    a, b = W[..., 0, :], W[..., 1, :]
+    c = jnp.cross(a, b).conj()
+    return jnp.stack([a, b, c], axis=-2)
+
+
+def compress_minimal(U: jnp.ndarray) -> jnp.ndarray:
+    """8-real compression: ``(..., 3, 3)`` complex -> ``(..., 8)`` real.
+
+    Stores ``a2, a3, b1`` (re/im) and the phases of ``a1`` and ``c1``;
+    unitarity fixes the rest. Singular when ``|a2|^2 + |a3|^2 == 0``
+    (e.g. the unit gauge) — intended for interacting gauge fields. More
+    sensitive to rounding than ``two_row`` (a 1/D division), so expect
+    ~1e-4 round-trip error in f32 instead of ~1e-6.
+    """
+    real = jnp.float64 if U.dtype == jnp.complex128 else jnp.float32
+    a2, a3, b1 = U[..., 0, 1], U[..., 0, 2], U[..., 1, 0]
+    th_a = jnp.angle(U[..., 0, 0]).astype(real)
+    th_c = jnp.angle(U[..., 2, 0]).astype(real)
+    return jnp.stack(
+        [a2.real.astype(real), a2.imag.astype(real),
+         a3.real.astype(real), a3.imag.astype(real),
+         b1.real.astype(real), b1.imag.astype(real), th_a, th_c], axis=-1)
+
+
+def reconstruct_minimal(W: jnp.ndarray, dtype=jnp.complex64) -> jnp.ndarray:
+    """Inverse of :func:`compress_minimal`: ``(..., 8)`` -> ``(..., 3, 3)``."""
+    a2 = (W[..., 0] + 1j * W[..., 1]).astype(dtype)
+    a3 = (W[..., 2] + 1j * W[..., 3]).astype(dtype)
+    b1 = (W[..., 4] + 1j * W[..., 5]).astype(dtype)
+    th_a, th_c = W[..., 6], W[..., 7]
+    d = (jnp.abs(a2) ** 2 + jnp.abs(a3) ** 2).real
+    a1 = (jnp.sqrt(jnp.maximum(1.0 - d, 0.0))
+          * jnp.exp(1j * th_a)).astype(dtype)
+    c1 = (jnp.sqrt(jnp.maximum(d - jnp.abs(b1) ** 2, 0.0))
+          * jnp.exp(1j * th_c)).astype(dtype)
+    dinv = (1.0 / jnp.maximum(d, 1e-30)).astype(dtype)
+    s = -a1.conj() * b1
+    b2 = (a2 * s - a3.conj() * c1.conj()) * dinv
+    b3 = (a3 * s + a2.conj() * c1.conj()) * dinv
+    c2 = (a3 * b1 - a1 * b3).conj()
+    c3 = (a1 * b2 - a2 * b1).conj()
+    row_a = jnp.stack([a1, a2, a3], axis=-1)
+    row_b = jnp.stack([b1, b2, b3], axis=-1)
+    row_c = jnp.stack([c1, c2, c3], axis=-1)
+    return jnp.stack([row_a, row_b, row_c], axis=-2)
+
+
 def unitarity_defect(U: jnp.ndarray) -> jnp.ndarray:
     """max |U U^dag - 1| over the field; ~1e-6 for healthy f32 SU(3)."""
     eye = jnp.eye(3, dtype=U.dtype)

@@ -13,12 +13,13 @@ elements.
 """
 from __future__ import annotations
 
-from typing import Tuple, Union
+from typing import NamedTuple, Tuple, Union
 
 import jax.numpy as jnp
 from jax import lax
 
 from repro import compat
+from repro.kernels.layout import GAUGE_COMPS, SPINOR_COMPS
 
 AxisNames = Union[str, Tuple[str, ...]]
 
@@ -78,3 +79,80 @@ def local_origin(t_axes: AxisNames, z_axes: AxisNames,
                  t_local: int, z_local: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Global (t0, z0) origin of this rank's block."""
     return (axis_index(t_axes) * t_local, axis_index(z_axes) * z_local)
+
+
+class HaloSlots(NamedTuple):
+    """The four in-flight halo faces of one local array.
+
+    Produced by :func:`start_exchange_tz` *before* the interior stencil
+    runs; consumed by :func:`assemble_tz` only in the thin boundary
+    pass, so the scheduler is free to overlap the ``ppermute`` traffic
+    with the interior compute (double-buffered halo slots).
+    """
+
+    lo_t: jnp.ndarray   # (1, Zl, ...)  from the t-1 neighbor
+    hi_t: jnp.ndarray   # (1, Zl, ...)  from the t+1 neighbor
+    lo_z: jnp.ndarray   # (Tl, 1, ...)  from the z-1 neighbor
+    hi_z: jnp.ndarray   # (Tl, 1, ...)  from the z+1 neighbor
+
+
+def start_exchange_tz(x: jnp.ndarray, t_axes: AxisNames, z_axes: AxisNames,
+                      t_axis: int = 0, z_axis: int = 1) -> HaloSlots:
+    """Issue all four face ``ppermute``s of ``x`` without assembling.
+
+    Unlike :func:`extend_tz` — whose ``concatenate`` makes every
+    downstream read depend on the exchange — this returns the in-flight
+    faces as separate slots.  All four act on the *un-extended* array,
+    so the z faces do NOT carry t-corner sites (the +-stencil never
+    reads corners; :func:`assemble_tz` zero-pads them).
+    """
+    return HaloSlots(
+        lo_t=neighbor_plane(x, t_axes, +1, t_axis),
+        hi_t=neighbor_plane(x, t_axes, -1, t_axis),
+        lo_z=neighbor_plane(x, z_axes, +1, z_axis),
+        hi_z=neighbor_plane(x, z_axes, -1, z_axis))
+
+
+def assemble_tz(x: jnp.ndarray, slots: HaloSlots,
+                t_axis: int = 0, z_axis: int = 1) -> jnp.ndarray:
+    """Assemble ``(Tl+2, Zl+2, ...)`` from a local block and its slots.
+
+    The four corner sites are zero-filled (the faces were exchanged from
+    the un-extended array): equivalent to :func:`extend_tz` for every
+    read the 8-point hopping stencil performs, since it never touches a
+    diagonal ``(t+-1, z+-1)`` neighbor.
+    """
+    ext_t = jnp.concatenate([slots.lo_t, x, slots.hi_t], axis=t_axis)
+    corner_shape = list(slots.lo_z.shape)
+    corner_shape[t_axis] = 1
+    corner = jnp.zeros(corner_shape, x.dtype)
+    lo_z = jnp.concatenate([corner, slots.lo_z, corner], axis=t_axis)
+    hi_z = jnp.concatenate([corner, slots.hi_z, corner], axis=t_axis)
+    return jnp.concatenate([lo_z, ext_t, hi_z], axis=z_axis)
+
+
+def halo_traffic_model(Tl: int, Zl: int, Y: int, Xh: int, *,
+                       nrhs: int = 1, itemsize: int = 4,
+                       gauge_comps: int = GAUGE_COMPS) -> dict:
+    """Per-rank interconnect bytes of one hopping-block halo exchange.
+
+    ``extend_tz`` moves 2 t-faces of ``Zl`` planes and 2 z-faces of
+    ``Tl + 2`` planes (corners ride along); the slot-based overlap path
+    moves the same faces minus the 4 corner rows (``Tl`` instead of
+    ``Tl + 2``) — the model uses the extend_tz count, an upper bound
+    either way.  Spinor faces scale with ``nrhs``; gauge faces scale
+    with ``gauge_comps`` — *compressed links are shipped compressed*, so
+    the two_row/minimal representations cut gauge halo traffic by the
+    same 33%/55% as their storage.  A Dhat application runs two hopping
+    blocks (one per parity): double everything for the operator.
+    """
+    face_sites = (2 * Zl + 2 * (Tl + 2)) * Y * Xh
+    bytes_spinor = itemsize * nrhs * SPINOR_COMPS * face_sites
+    bytes_gauge = itemsize * 4 * gauge_comps * face_sites
+    return {
+        "face_sites": face_sites,
+        "bytes_spinor_exchange": bytes_spinor,
+        "bytes_gauge_exchange": bytes_gauge,
+        "bytes_hop_exchange": bytes_spinor + bytes_gauge,
+        "bytes_dhat_exchange": 2 * (bytes_spinor + bytes_gauge),
+    }

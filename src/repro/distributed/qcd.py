@@ -4,15 +4,25 @@ Sharding: lattice T over (``pod``, ``data``), Z over ``model``; the packed
 (Y, Xh) plane — the SIMD-analogue dims — is never sharded.  The hopping
 blocks therefore need halo exchange only for z/t, via ``lax.ppermute``.
 
-Two overlap modes (paper Sec. 3.5/3.6):
+Three overlap modes (paper Sec. 3.5/3.6):
 
 * ``fused``: halo-extend (ppermute + concat), then one kernel over the
   extended array.  Simplest; XLA may still overlap the ppermutes with
   whatever precedes the operator.
+* ``interior``: the comms/compute-overlap mode.  The four face
+  ``ppermute``s are issued FIRST as double-buffered halo slots
+  (:func:`halo.start_exchange_tz`), then the interior ``(Tl-2, Zl-2)``
+  block — whose stencil reach lies entirely inside the local block, so
+  it has NO data dependence on the exchange — runs the main kernel
+  while the faces are in flight; a thin 1-plane boundary pass consumes
+  the assembled halos and the rows are concatenated.  Unlike ``split``
+  nothing is recomputed and multi-RHS batching works (the boundary pass
+  is the batch-polymorphic planar-native stencil).
 * ``split``: the *bulk* kernel runs on local data with periodic wrap and
   does not depend on the ppermutes, so the scheduler can overlap the halo
   traffic with the full bulk stencil (the EO1 / bulk / EO2 structure);
-  boundary planes are then recomputed from the halos and merged.
+  boundary planes are then recomputed from the halos and merged
+  (single-RHS only).
 
 Backends: ``pallas`` (the TPU kernel; interpret-mode off-TPU) or ``jnp``
 (pure-XLA reference path, also used by the CPU dry-run so the lowered HLO
@@ -44,7 +54,7 @@ class QCDPartition:
     t_axes: Tuple[str, ...]
     z_axes: Tuple[str, ...]
     backend: str = "jnp"          # "jnp" | "jnp_planar" | "pallas"
-    overlap: str = "fused"        # "fused" | "split"
+    overlap: str = "fused"        # "fused" | "interior" | "split"
     interpret: Optional[bool] = None
     # hoist the gauge halo exchange out of the operator: the gauge field
     # is solver-invariant, so its halos are exchanged ONCE per solve and
@@ -99,6 +109,12 @@ def _local_hop(part: QCDPartition, u_out, u_in, src, out_parity,
     lead = 1 if batched else 0
     Tl, Zl = src.shape[lead], src.shape[lead + 1]
     t0, z0 = halo.local_origin(part.t_axes, part.z_axes, Tl, Zl)
+
+    if part.overlap == "interior":
+        return _interior_overlap_hop(part, u_out, u_in, src, out_parity,
+                                     batched, lead, Tl, Zl, t0, z0,
+                                     u_in_pre_extended)
+
     src_ext = halo.extend_tz(src, part.t_axes, part.z_axes, lead, lead + 1)
     u_in_ext = (u_in if u_in_pre_extended else
                 halo.extend_tz(u_in, part.t_axes, part.z_axes, 1, 2))
@@ -120,10 +136,13 @@ def _local_hop(part: QCDPartition, u_out, u_in, src, out_parity,
         return kref.hop_block_ext_planar(u_out, u_in_ext, src_ext,
                                          out_parity, (t0 + z0) % 2)
 
+    if part.overlap != "split":
+        raise ValueError(f"unknown overlap mode {part.overlap!r}: "
+                         "expected 'fused', 'interior' or 'split'")
     if batched:
-        raise ValueError("multi-RHS batching requires overlap='fused' "
-                         "(the split boundary-recompute path is "
-                         "single-RHS only)")
+        raise ValueError("multi-RHS batching requires overlap='fused' or "
+                         "'interior' (the split boundary-recompute path "
+                         "is single-RHS only)")
 
     # --- split: bulk with periodic wrap (no halo dependency) ------------
     if part.backend == "pallas":
@@ -162,6 +181,98 @@ def _local_hop(part: QCDPartition, u_out, u_in, src, out_parity,
     out = bulk.at[0:1].set(lo_t).at[Tl - 1:Tl].set(hi_t)
     out = out.at[:, 0:1].set(lo_z).at[:, Zl - 1:Zl].set(hi_z)
     return out
+
+
+def _interior_overlap_hop(part: QCDPartition, u_out, u_in, src, out_parity,
+                          batched, lead, Tl, Zl, t0, z0,
+                          u_in_pre_extended):
+    """Comms/compute-overlapped hopping block (``overlap='interior'``).
+
+    Schedule, in issue order:
+
+    1. the four spinor face ``ppermute``s (plus the four gauge faces
+       unless the gauge was pre-extended) are issued first, as
+       double-buffered :class:`halo.HaloSlots` — no concat, so nothing
+       the interior reads depends on them;
+    2. the **interior pass** computes output rows ``(1..Tl-2, 1..Zl-2)``
+       with the main (Pallas or planar-native) kernel: the un-extended
+       local block already holds every stencil operand of the interior —
+       it IS the halo-extended array of the interior sub-block — so the
+       kernel runs while the faces are in flight;
+    3. the slots are assembled into halo-extended arrays (corners
+       zero-padded; never read by the +-stencil);
+    4. the **boundary pass** recomputes nothing: four 1-plane slabs (two
+       t-rows over the full z extent, two z-columns over the interior t
+       rows) run the batch-polymorphic planar-native stencil on thin
+       slices of the assembled arrays;
+    5. rows are merged by concatenation (corner sites land in the t-row
+       slabs; the z-column slabs are trimmed to the interior t range).
+
+    Needs local ``Tl, Zl >= 3`` so the interior block is non-empty.
+    """
+    if Tl < 3 or Zl < 3:
+        raise ValueError("overlap='interior' needs local T,Z >= 3 (a "
+                         "non-empty interior after peeling one boundary "
+                         "plane per side); use 'fused' for thin shards")
+
+    # (1) issue the exchange; nothing before step (3) depends on it.
+    src_slots = halo.start_exchange_tz(src, part.t_axes, part.z_axes,
+                                       lead, lead + 1)
+    if u_in_pre_extended:
+        u_in_local = u_in[:, 1:-1, 1:-1]
+        u_slots = None
+    else:
+        u_in_local = u_in
+        u_slots = halo.start_exchange_tz(u_in, part.t_axes, part.z_axes,
+                                         1, 2)
+
+    # (2) interior pass on the un-extended local block.
+    u_out_int = u_out[:, 1:-1, 1:-1]
+    par_int = (t0 + 1 + z0 + 1) % 2
+    if part.backend == "pallas":
+        interior = hop_block_planar(u_out_int, u_in_local, src, out_parity,
+                                    tz_offset=(t0 + 1, z0 + 1), halo=True,
+                                    interpret=part.interpret)
+    elif part.backend == "jnp_planar":
+        interior = hop_block_ext_planar_native(u_out_int, u_in_local, src,
+                                               out_parity, par_int)
+    elif batched:
+        interior = jax.vmap(lambda s: kref.hop_block_ext_planar(
+            u_out_int, u_in_local, s, out_parity, par_int))(src)
+    else:
+        interior = kref.hop_block_ext_planar(u_out_int, u_in_local, src,
+                                             out_parity, par_int)
+
+    # (3) assemble the halo-extended views from the landed slots.
+    src_ext = halo.assemble_tz(src, src_slots, lead, lead + 1)
+    u_in_ext = (u_in if u_in_pre_extended else
+                halo.assemble_tz(u_in, u_slots, 1, 2))
+
+    # (4) boundary pass: thin slabs through the planar-native stencil
+    # (batch-polymorphic, so multi-RHS blocks work — unlike 'split').
+    bidx = (slice(None),) * lead
+
+    def slab(sl_t, sl_z, uo_t, uo_z, off):
+        sub_src = src_ext[bidx + (sl_t, sl_z)]
+        sub_uin = u_in_ext[:, sl_t, sl_z]
+        sub_uout = u_out[:, uo_t, uo_z]
+        return hop_block_ext_planar_native(sub_uout, sub_uin, sub_src,
+                                           out_parity, off)
+
+    all_ = slice(None)
+    par0 = (t0 + z0) % 2
+    lo_t = slab(slice(0, 3), all_, slice(0, 1), all_, par0)
+    hi_t = slab(slice(Tl - 1, Tl + 2), all_, slice(Tl - 1, Tl), all_,
+                (t0 + Tl - 1 + z0) % 2)
+    lo_z = slab(all_, slice(0, 3), all_, slice(0, 1), par0)
+    hi_z = slab(all_, slice(Zl - 1, Zl + 2), all_, slice(Zl - 1, Zl),
+                (t0 + z0 + Zl - 1) % 2)
+
+    # (5) merge by concatenation — no scatter on the hot path.
+    t_int = slice(1, Tl - 1)
+    mid = jnp.concatenate([lo_z[bidx + (t_int,)], interior,
+                           hi_z[bidx + (t_int,)]], axis=lead + 1)
+    return jnp.concatenate([lo_t, mid, hi_t], axis=lead)
 
 
 def make_hop_fn(part: QCDPartition, out_parity: int, *,

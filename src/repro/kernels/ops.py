@@ -25,9 +25,19 @@ def hop_block(u_out_p, u_in_p, src_p, *, out_parity: int,
                             interpret=interpret)
 
 
-def make_planar_fields(U_e, U_o, dtype=jnp.float32):
-    """Convert complex even/odd gauge fields to the kernel layout."""
-    return layout.gauge_to_planar(U_e, dtype), layout.gauge_to_planar(U_o, dtype)
+def make_planar_fields(U_e, U_o, dtype=jnp.float32, compression="none"):
+    """Convert complex even/odd gauge fields to the kernel layout.
+
+    ``compression`` selects the stored link representation ("none" |
+    "two_row" | "minimal" — see :func:`layout.gauge_compress_planar`);
+    the kernels expand compressed planes in-register.
+    """
+    u_e_p = layout.gauge_to_planar(U_e, dtype)
+    u_o_p = layout.gauge_to_planar(U_o, dtype)
+    if compression not in (None, "none"):
+        u_e_p = layout.gauge_compress_planar(u_e_p, compression)
+        u_o_p = layout.gauge_compress_planar(u_o_p, compression)
+    return u_e_p, u_o_p
 
 
 def hop_oe_kernel(u_e_p, u_o_p, psi_e, *, interpret=None):
@@ -113,7 +123,8 @@ def apply_dhat_planar_any(u_e_p, u_o_p, src_p, kappa: float, *,
     * ``False`` / ``"unfused"`` — force the two-kernel path.
     """
     if fused is None:
-        fused = fused_dhat_policy(src_p.shape, src_p.dtype)
+        fused = fused_dhat_policy(src_p.shape, src_p.dtype,
+                                  gauge_comps=u_e_p.shape[3])
     elif fused is True:
         fused = "resident"
     elif fused is False:

@@ -45,10 +45,23 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
-from .layout import GAUGE_COMPS, SPINOR_COMPS
+from .layout import (GAUGE_COMPS, GAUGE_COMPS_MINIMAL, GAUGE_COMPS_TWO_ROW,
+                     SPINOR_COMPS, expand_links_planes)
 
 # Flops per lattice site of one hopping block application, QXS convention.
 HOP_FLOPS_PER_SITE = 1320
+
+# Extra in-register flops to rebuild one full SU(3) link from its
+# compressed planes (see layout.expand_links_planes): two_row rebuilds
+# row c = conj(a x b) (6 complex mul + 3 sub), minimal additionally
+# solves the 2x2 system for (b2, b3) and evaluates sqrt/sin/cos for the
+# phase-encoded a1/c1.  The hopping block expands 8 links per site.
+RECON_FLOPS_PER_LINK = {
+    GAUGE_COMPS: 0,
+    GAUGE_COMPS_TWO_ROW: 42,
+    GAUGE_COMPS_MINIMAL: 150,
+}
+LINKS_EXPANDED_PER_SITE = 8
 
 
 def _c(p: jnp.ndarray, s: int, a: int):
@@ -151,12 +164,18 @@ def _hop_plane(p, pzp, pzm, ptp, ptm, u_out, ux, uy, uz, ut,
     ``p`` is the center source plane ``(24, Y, Xh)`` — or, batched,
     ``(24, nrhs, Y, Xh)`` with the RHS axis right behind the component
     axis; ``pzp/pzm/ptp/ptm`` the z/t neighbor planes; ``u_out`` the
-    output-parity gauge ``(4, 18, Y, Xh)``; ``ux/uy/uz/ut`` the
+    output-parity gauge ``(4, gc, Y, Xh)``; ``ux/uy/uz/ut`` the
     source-parity gauge planes the backward hops read (``uz/ut`` already
     shifted to z-1 / t-1).  Gauge planes never carry the RHS axis: they
     broadcast, so they are loaded once per plane regardless of the batch.
     x/y neighbors are in-register rolls of the center plane (the paper's
     sel/tbl/ext sequence), so no operands are needed for them.
+
+    ``gc`` may be 18 (full links), 12 (two_row) or 8 (minimal): the
+    compressed planes are rolled/masked *first* (reconstruction is
+    element-wise, so shifts commute with it and move fewer planes) and
+    expanded to the 18 component planes in-register per hop direction —
+    the HBM gauge stream shrinks 33%/55% for some extra VPU flops.
     """
     Y, Xh = p.shape[-2], p.shape[-1]
 
@@ -178,10 +197,12 @@ def _hop_plane(p, pzp, pzm, ptp, ptm, u_out, ux, uy, uz, ut,
             (pzp, pzm, uz), (ptp, ptm, ut)]
     for mu, (pf, pb, ub) in enumerate(hops):
         # Forward: (1 - g_mu) U_mu(x) psi(x + mu).
-        uh = _su3_mul(u_out[mu], _proj(pf, mu, -1), dagger=False)
+        uh = _su3_mul(expand_links_planes(u_out[mu]), _proj(pf, mu, -1),
+                      dagger=False)
         _recon_acc(acc, uh, mu, -1)
         # Backward: (1 + g_mu) U_mu^dag(x - mu) psi(x - mu).
-        uh = _su3_mul(ub, _proj(pb, mu, +1), dagger=True)
+        uh = _su3_mul(expand_links_planes(ub), _proj(pb, mu, +1),
+                      dagger=True)
         _recon_acc(acc, uh, mu, +1)
     return acc
 
@@ -245,12 +266,14 @@ def hop_block_ext_planar_native(u_out_p: jnp.ndarray,
     Accepts a batched source ``(nrhs, T+2, Z+2, 24, Y, Xh)`` (gauge never
     batched); the RHS axis rides right behind the component axis through
     the broadcasted SU(3) math — one gauge read per plane for the block.
+    Compressed planar gauge fields (12/8 component planes) are expanded
+    per hop direction, mirroring the in-register path of the kernel.
     """
     # Component axis to the front; an optional leading RHS axis lands
     # right behind it, so the trailing dims are (T, Z, Y, Xh) either way.
     src = jnp.moveaxis(src_ext_p, -3, 0)       # (24, [N,] T+2, Z+2, Y, Xh)
-    u_in = jnp.moveaxis(u_in_ext_p, 3, 1)      # (4, 18, T+2, Z+2, Y, Xh)
-    u_out = jnp.moveaxis(u_out_p, 3, 1)        # (4, 18, T, Z, Y, Xh)
+    u_in = jnp.moveaxis(u_in_ext_p, 3, 1)      # (4, gc, T+2, Z+2, Y, Xh)
+    u_out = jnp.moveaxis(u_out_p, 3, 1)        # (4, gc, T, Z, Y, Xh)
     Tl, Zl = u_out_p.shape[1], u_out_p.shape[2]
     Y, Xh = src_ext_p.shape[-2], src_ext_p.shape[-1]
 
@@ -282,28 +305,32 @@ def hop_block_ext_planar_native(u_out_p: jnp.ndarray,
     hops = [(psi_xf, psi_xb, u_xb), (psi_yf, psi_yb, u_yb),
             (psi_zf, psi_zb, uz), (psi_tf, psi_tb, ut)]
     for mu, (pf, pb, ub) in enumerate(hops):
-        uh = _su3_mul(u_out[mu], _proj(pf, mu, -1), dagger=False)
+        uh = _su3_mul(expand_links_planes(u_out[mu]), _proj(pf, mu, -1),
+                      dagger=False)
         _recon_acc(acc, uh, mu, -1)
-        uh = _su3_mul(ub, _proj(pb, mu, +1), dagger=True)
+        uh = _su3_mul(expand_links_planes(ub), _proj(pb, mu, +1),
+                      dagger=True)
         _recon_acc(acc, uh, mu, +1)
     out = jnp.stack(acc).astype(src_ext_p.dtype)
     return jnp.moveaxis(out, 0, -3)            # ([N,] T, Z, 24, Y, Xh)
 
 
 def _build_specs(Tl: int, Zl: int, Y: int, Xh: int, halo: bool,
-                 with_axpy: bool, nrhs: Optional[int] = None):
+                 with_axpy: bool, nrhs: Optional[int] = None,
+                 gauge_comps: int = GAUGE_COMPS):
     """BlockSpecs for (parity, psi x5, U_out, U_in x4[, psi0]).
 
     With ``nrhs`` the spinor blocks grow a leading RHS axis covered whole
     by every grid step (block index 0); the gauge blocks are unchanged —
     per grid step the pipeline fetches each gauge plane exactly once,
-    independent of the batch size.
+    independent of the batch size.  ``gauge_comps`` sizes the gauge
+    component-plane axis (18 full / 12 two_row / 8 minimal).
     """
     if nrhs is None:
         sblk = (1, 1, SPINOR_COMPS, Y, Xh)
     else:
         sblk = (nrhs, 1, 1, SPINOR_COMPS, Y, Xh)
-    gblk1 = (1, 1, 1, GAUGE_COMPS, Y, Xh)
+    gblk1 = (1, 1, 1, gauge_comps, Y, Xh)
 
     def s(im):
         if nrhs is None:
@@ -344,7 +371,7 @@ def _build_specs(Tl: int, Zl: int, Y: int, Xh: int, halo: bool,
         ]
 
     par = pl.BlockSpec((1, 1), lambda t, z: (t, z), memory_space=pltpu.SMEM)
-    u_out = pl.BlockSpec((4, 1, 1, GAUGE_COMPS, Y, Xh),
+    u_out = pl.BlockSpec((4, 1, 1, gauge_comps, Y, Xh),
                          lambda t, z: (0, t, z, 0, 0, 0))
     specs = [par] + psi + [u_out] + u_in
     if with_axpy:
@@ -355,7 +382,8 @@ def _build_specs(Tl: int, Zl: int, Y: int, Xh: int, halo: bool,
 
 def hop_traffic_model(Tl: int, Zl: int, Y: int, Xh: int, *,
                       nrhs: int = 1, itemsize: int = 4,
-                      with_axpy: bool = False) -> dict:
+                      with_axpy: bool = False,
+                      gauge_comps: int = GAUGE_COMPS) -> dict:
     """HBM-traffic / flops model of one (batched) hopping-block call.
 
     The gauge term is *independent of nrhs* — each (t, z) grid step loads
@@ -365,14 +393,22 @@ def hop_traffic_model(Tl: int, Zl: int, Y: int, Xh: int, *,
     nrhs grows.  This is the model :mod:`benchmarks.bench_multirhs`
     prints next to measured numbers, and what the kernel's
     ``pl.CostEstimate`` is built from.
+
+    ``gauge_comps`` scales the gauge stream for compressed links (12/8
+    planes instead of 18) and adds the in-register reconstruction flops
+    (:data:`RECON_FLOPS_PER_LINK` x 8 expanded links per site) — the
+    bytes/flops trade a memory-bound stencil wants to make.
     """
     sites = Tl * Zl * Y * Xh
     bytes_spinor = itemsize * SPINOR_COMPS * sites * nrhs   # read + written
-    bytes_gauge = 2 * itemsize * 4 * GAUGE_COMPS * sites    # both parities
+    bytes_gauge = 2 * itemsize * 4 * gauge_comps * sites    # both parities
     total = 2 * bytes_spinor + bytes_gauge + (bytes_spinor if with_axpy else 0)
-    flops = HOP_FLOPS_PER_SITE * sites * nrhs
+    recon = (RECON_FLOPS_PER_LINK[gauge_comps]
+             * LINKS_EXPANDED_PER_SITE * sites)
+    flops = HOP_FLOPS_PER_SITE * sites * nrhs + recon
     return {
         "flops": flops,
+        "flops_recon": recon,
         "bytes_spinor": bytes_spinor,
         "bytes_gauge": bytes_gauge,
         "bytes_total": total,
@@ -389,8 +425,9 @@ def hop_block_planar(u_out_p: jnp.ndarray, u_in_p: jnp.ndarray,
     """Apply one hopping block in the planar layout via the Pallas kernel.
 
     Args:
-      u_out_p: planar gauge at output-parity sites ``(4, T, Z, 18, Y, Xh)``
-        (never halo-extended, never batched).
+      u_out_p: planar gauge at output-parity sites ``(4, T, Z, gc, Y, Xh)``
+        with gc in {18, 12, 8} — compressed links are expanded
+        in-register (never halo-extended, never batched).
       u_in_p: planar gauge at source-parity sites; halo-extended to
         ``(4, T+2, Z+2, ...)`` iff ``halo``.
       src_p: planar source spinor ``(T, Z, 24, Y, Xh)`` — or batched
@@ -420,13 +457,15 @@ def hop_block_planar(u_out_p: jnp.ndarray, u_in_p: jnp.ndarray,
            + (jnp.arange(Zl, dtype=jnp.int32)[None, :] + z0)) % 2
 
     with_axpy = axpy is not None
+    gauge_comps = u_out_p.shape[3]
     in_specs, out_spec = _build_specs(Tl, Zl, Y, Xh, halo, with_axpy,
-                                      nrhs=nrhs)
+                                      nrhs=nrhs, gauge_comps=gauge_comps)
     coeff = float(axpy[0]) if with_axpy else None
 
     model = hop_traffic_model(Tl, Zl, Y, Xh, nrhs=nrhs or 1,
                               itemsize=src_p.dtype.itemsize,
-                              with_axpy=with_axpy)
+                              with_axpy=with_axpy,
+                              gauge_comps=gauge_comps)
     cost = pl.CostEstimate(flops=model["flops"],
                            bytes_accessed=model["bytes_total"],
                            transcendentals=0)
@@ -551,12 +590,15 @@ def dhat_planar_fused(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
     Y, Xh = psi_e_p.shape[-2], psi_e_p.shape[-1]
     t0, z0 = tz_offset
 
-    tmp_bytes = psi_e_p.dtype.itemsize * math.prod(psi_e_p.shape)
-    if not interpret and tmp_bytes > _FUSED_SCRATCH_LIMIT_BYTES:
+    gauge_comps = u_e_p.shape[3]
+    if not interpret and not fused_dhat_fits(psi_e_p.shape, psi_e_p.dtype,
+                                             gauge_comps=gauge_comps):
+        tmp_bytes = psi_e_p.dtype.itemsize * math.prod(psi_e_p.shape)
         raise ValueError(
             f"fused Dhat intermediate needs {tmp_bytes} B of VMEM scratch "
-            f"(> {_FUSED_SCRATCH_LIMIT_BYTES}); use the unfused "
-            "apply_dhat_planar path for this local volume / nrhs")
+            f"(> {_FUSED_SCRATCH_LIMIT_BYTES} budget at gauge_comps="
+            f"{gauge_comps}); use the unfused apply_dhat_planar path for "
+            "this local volume / nrhs")
 
     par = ((jnp.arange(Tl, dtype=jnp.int32)[:, None] + t0)
            + (jnp.arange(Zl, dtype=jnp.int32)[None, :] + z0)) % 2
@@ -565,7 +607,7 @@ def dhat_planar_fused(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
         sblk = (nrhs, 1, 1, SPINOR_COMPS, Y, Xh)
     else:
         sblk = (1, 1, SPINOR_COMPS, Y, Xh)
-    gblk1 = (1, 1, 1, GAUGE_COMPS, Y, Xh)
+    gblk1 = (1, 1, 1, gauge_comps, Y, Xh)
 
     def s(im):
         if not batched:
@@ -597,7 +639,7 @@ def dhat_planar_fused(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
     def gauge_specs(live):
         # ``live(s)`` is 1 in the pass that reads the shifted planes.
         return [
-            pl.BlockSpec((4, 1, 1, GAUGE_COMPS, Y, Xh),
+            pl.BlockSpec((4, 1, 1, gauge_comps, Y, Xh),
                          lambda _, t, z: (0, t, z, 0, 0, 0)),
             g(lambda s_, t, z: (2, t * live(s_),
                                 ((z - 1) % Zl) * live(s_), 0, 0, 0)),
@@ -616,7 +658,8 @@ def dhat_planar_fused(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
     # one write touch HBM (the intermediate is scratch-resident).
     n = nrhs or 1
     m = hop_traffic_model(Tl, Zl, Y, Xh, nrhs=n,
-                          itemsize=psi_e_p.dtype.itemsize)
+                          itemsize=psi_e_p.dtype.itemsize,
+                          gauge_comps=gauge_comps)
     cost = pl.CostEstimate(
         flops=2 * m["flops"] + 2 * SPINOR_COMPS * Tl * Zl * Y * Xh * n,
         bytes_accessed=2 * m["bytes_spinor"] + 2 * m["bytes_gauge"],
@@ -644,7 +687,22 @@ def dhat_planar_fused(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
               u_e_p, u_e_p, u_e_p, u_o_p, u_o_p, u_o_p)
 
 
-def fused_dhat_fits(psi_e_p_shape, dtype=jnp.float32) -> bool:
+def gauge_headroom_bytes(Y: int, Xh: int, itemsize: int,
+                         gauge_comps: int = GAUGE_COMPS) -> int:
+    """Extra VMEM freed per pipeline stage by compressed gauge blocks.
+
+    The fused kernels keep 12 gauge plane-sets in flight per grid step
+    (u_out x4 + u_in x4 shifted views per parity pass over the two
+    pipelined passes), double-buffered by the pipeline.  Compression
+    shrinks each from 18 to ``gauge_comps`` planes of ``(Y, Xh)``, and
+    the scratch budget can absorb the difference — the resident/stream
+    policy thresholds move accordingly.  Zero at ``gauge_comps == 18``.
+    """
+    return (GAUGE_COMPS - gauge_comps) * 12 * 2 * Y * Xh * itemsize
+
+
+def fused_dhat_fits(psi_e_p_shape, dtype=jnp.float32, *,
+                    gauge_comps: int = GAUGE_COMPS) -> bool:
     """Whether the fused kernel's VMEM-resident intermediate fits.
 
     ``psi_e_p_shape`` is the (possibly batched) planar spinor shape —
@@ -652,9 +710,13 @@ def fused_dhat_fits(psi_e_p_shape, dtype=jnp.float32) -> bool:
     exactly that many elements.  ``dtype`` sizes one element (an int
     itemsize is also accepted for backward compatibility) — f64 under
     x64 halves the admissible volume versus f32, bf16 doubles it.
+    Compressed links (``gauge_comps`` < 18) free pipeline VMEM
+    (:func:`gauge_headroom_bytes`), nudging the threshold up.
     """
     itemsize = dtype if isinstance(dtype, int) else jnp.dtype(dtype).itemsize
-    return itemsize * math.prod(psi_e_p_shape) <= _FUSED_SCRATCH_LIMIT_BYTES
+    limit = _FUSED_SCRATCH_LIMIT_BYTES + gauge_headroom_bytes(
+        psi_e_p_shape[-2], psi_e_p_shape[-1], itemsize, gauge_comps)
+    return itemsize * math.prod(psi_e_p_shape) <= limit
 
 
 # ---------------------------------------------------------------------------
@@ -686,13 +748,17 @@ def stream_ring_bytes(psi_e_p_shape, dtype=jnp.float32,
     return itemsize * window * per_row
 
 
-def fused_dhat_stream_fits(psi_e_p_shape, dtype=jnp.float32) -> bool:
+def fused_dhat_stream_fits(psi_e_p_shape, dtype=jnp.float32, *,
+                           gauge_comps: int = GAUGE_COMPS) -> bool:
     """Whether the streaming kernel's t-plane ring fits the VMEM budget."""
-    return (stream_ring_bytes(psi_e_p_shape, dtype)
-            <= _FUSED_SCRATCH_LIMIT_BYTES)
+    itemsize = dtype if isinstance(dtype, int) else jnp.dtype(dtype).itemsize
+    limit = _FUSED_SCRATCH_LIMIT_BYTES + gauge_headroom_bytes(
+        psi_e_p_shape[-2], psi_e_p_shape[-1], itemsize, gauge_comps)
+    return stream_ring_bytes(psi_e_p_shape, dtype) <= limit
 
 
-def fused_dhat_policy(psi_e_p_shape, dtype=jnp.float32) -> str:
+def fused_dhat_policy(psi_e_p_shape, dtype=jnp.float32, *,
+                      gauge_comps: int = GAUGE_COMPS) -> str:
     """Three-way fused-Dhat path selection for a planar spinor shape.
 
     ``"resident"`` — the whole (batched) odd intermediate fits the VMEM
@@ -703,17 +769,22 @@ def fused_dhat_policy(psi_e_p_shape, dtype=jnp.float32) -> str:
     ``"unfused"`` — even one window row ring is too large (enormous
     z-planes): fall back to the two-kernel ``apply_dhat_planar`` path,
     which needs no scratch at all.
+
+    ``gauge_comps`` < 18 moves both thresholds up by the pipeline VMEM
+    the compressed gauge blocks free (:func:`gauge_headroom_bytes`).
     """
-    if fused_dhat_fits(psi_e_p_shape, dtype):
+    if fused_dhat_fits(psi_e_p_shape, dtype, gauge_comps=gauge_comps):
         return "resident"
-    if fused_dhat_stream_fits(psi_e_p_shape, dtype):
+    if fused_dhat_stream_fits(psi_e_p_shape, dtype,
+                              gauge_comps=gauge_comps):
         return "stream"
     return "unfused"
 
 
 def dhat_stream_traffic_model(Tl: int, Zl: int, Y: int, Xh: int, *,
                               nrhs: int = 1, itemsize: int = 4,
-                              window: int = STREAM_WINDOW_ROWS) -> dict:
+                              window: int = STREAM_WINDOW_ROWS,
+                              gauge_comps: int = GAUGE_COMPS) -> dict:
     """HBM-traffic / flops / scratch model of one streaming fused Dhat.
 
     Versus the resident fused kernel the streaming variant recomputes 2
@@ -724,7 +795,8 @@ def dhat_stream_traffic_model(Tl: int, Zl: int, Y: int, Xh: int, *,
     ring.  The :mod:`benchmarks` print these numbers next to measured
     times, and the kernel's ``pl.CostEstimate`` is built from them.
     """
-    m = hop_traffic_model(Tl, Zl, Y, Xh, nrhs=nrhs, itemsize=itemsize)
+    m = hop_traffic_model(Tl, Zl, Y, Xh, nrhs=nrhs, itemsize=itemsize,
+                          gauge_comps=gauge_comps)
     sites = Tl * Zl * Y * Xh
     produce_scale = (Tl + 2) / Tl
     flops = (int(m["flops"] * produce_scale)      # H_oe incl. recompute
@@ -842,13 +914,17 @@ def dhat_planar_fused_stream(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
     Y, Xh = psi_e_p.shape[-2], psi_e_p.shape[-1]
     t0, z0 = tz_offset
 
+    gauge_comps = u_e_p.shape[3]
     ring_bytes = stream_ring_bytes(psi_e_p.shape, psi_e_p.dtype,
                                    window=window)
-    if not interpret and ring_bytes > _FUSED_SCRATCH_LIMIT_BYTES:
+    ring_limit = _FUSED_SCRATCH_LIMIT_BYTES + gauge_headroom_bytes(
+        Y, Xh, psi_e_p.dtype.itemsize, gauge_comps)
+    if not interpret and ring_bytes > ring_limit:
         raise ValueError(
             f"streaming Dhat ring needs {ring_bytes} B of VMEM "
-            f"(> {_FUSED_SCRATCH_LIMIT_BYTES}); this z-plane volume / "
-            "nrhs needs the unfused apply_dhat_planar path")
+            f"(> {ring_limit} budget at gauge_comps={gauge_comps}); this "
+            "z-plane volume / nrhs needs the unfused apply_dhat_planar "
+            "path")
 
     par = ((jnp.arange(Tl, dtype=jnp.int32)[:, None] + t0)
            + (jnp.arange(Zl, dtype=jnp.int32)[None, :] + z0)) % 2
@@ -857,8 +933,8 @@ def dhat_planar_fused_stream(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
         sblk = (nrhs, 1, 1, SPINOR_COMPS, Y, Xh)
     else:
         sblk = (1, 1, SPINOR_COMPS, Y, Xh)
-    gblk1 = (1, 1, 1, GAUGE_COMPS, Y, Xh)
-    gblk4 = (4, 1, 1, GAUGE_COMPS, Y, Xh)
+    gblk1 = (1, 1, 1, gauge_comps, Y, Xh)
+    gblk4 = (4, 1, 1, gauge_comps, Y, Xh)
 
     def spec(im):
         if not batched:
@@ -901,7 +977,8 @@ def dhat_planar_fused_stream(u_e_p: jnp.ndarray, u_o_p: jnp.ndarray,
     n = nrhs or 1
     model = dhat_stream_traffic_model(Tl, Zl, Y, Xh, nrhs=n,
                                       itemsize=psi_e_p.dtype.itemsize,
-                                      window=window)
+                                      window=window,
+                                      gauge_comps=gauge_comps)
     cost = pl.CostEstimate(flops=model["flops"],
                            bytes_accessed=model["bytes_total"],
                            transcendentals=0)

@@ -57,6 +57,7 @@ def _print_backend_info():
         print(f"    dtypes={list(caps.dtypes) or '(follows gauge)'} "
               f"interpret={caps.supports_interpret} "
               f"policies={list(caps.policies)}")
+        print(f"    gauge_compressions={list(caps.gauge_compressions)}")
         print(f"    {caps.description}")
 
 
@@ -76,6 +77,21 @@ def main(argv=None):
                          "jnp off-TPU and pallas_fused on TPU; 'help' "
                          "prints per-backend capability metadata and "
                          "exits. " + _backend_help())
+    ap.add_argument("--gauge-compression", default="none",
+                    choices=["none", "two_row", "minimal"],
+                    help="stored SU(3) link representation: two_row "
+                         "ships 12 of 18 real planes (-33%% gauge "
+                         "bytes), minimal ships 8 (-55%%); the kernels "
+                         "reconstruct the full matrix in-register")
+    ap.add_argument("--overlap", default="",
+                    choices=["", "fused", "split", "interior", "on",
+                             "off"],
+                    help="distributed-backend halo strategy: 'interior' "
+                         "(alias 'on') overlaps the ppermute exchange "
+                         "with the interior stencil, 'fused' (alias "
+                         "'off') exchanges first, 'split' separates "
+                         "local/halo passes; only valid with "
+                         "--backend distributed")
     ap.add_argument("--nrhs", type=int, default=1,
                     help="number of right-hand sides per solve; >1 runs "
                          "the batched kernels (gauge field streamed once "
@@ -112,10 +128,19 @@ def main(argv=None):
     # solve runs at the gauge's complex64).  Resolve "auto" FIRST so
     # e.g. auto->pallas_fused on TPU still honors --inner-dtype.
     bname = api.BackendSpec(name=args.backend).resolve_name()
+    opts = []
+    if args.overlap:
+        if bname != "distributed":
+            ap.error("--overlap only applies to --backend distributed")
+        opts.append(("overlap",
+                     {"on": "interior", "off": "fused"}.get(args.overlap,
+                                                            args.overlap)))
     bspec = api.BackendSpec(
         name=bname,
         dtype=(inner_dtype if inner_dtype and bname != "jnp"
-               else None)).validated()
+               else None),
+        gauge_compression=args.gauge_compression,
+        opts=tuple(opts)).validated()
     sspec = api.SolveSpec(
         method=args.method, tol=args.tol,
         recompute_every=args.recompute_every,

@@ -122,19 +122,27 @@ def test_r2_out_of_scope_paths_are_free():
         assert _rule_hits(r2_registry, path, src) == []
 
 
-# --- R3: solve_wilson_eo shim containment ----------------------------
+# --- R3: solve_wilson_eo must not exist ------------------------------
 
 
 def test_r3_fires_on_fixture():
     hits = _rule_hits(r3_api, "tests/test_other.py",
                       _fixture("r3_shim.py"))
-    assert hits == [("R3", 2), ("R3", 8), ("R3", 9)]
+    # import@2, Name call@8, Attribute call@9, re-definition@12.
+    assert hits == [("R3", 2), ("R3", 8), ("R3", 9), ("R3", 12)]
 
 
-def test_r3_shim_home_and_parity_tests_are_exempt():
+def test_r3_formerly_exempt_paths_now_fire():
+    """PR 7 deleted the shim at its removal horizon; the old
+    containment allowlist (shim home, core re-export, designated parity
+    tests) is gone with it — the rule fires everywhere now."""
     src = _fixture("r3_shim.py")
-    for path in sorted(r3_api.ALLOWED_PATHS):
-        assert _rule_hits(r3_api, path, src) == []
+    assert not hasattr(r3_api, "ALLOWED_PATHS")
+    for path in ("src/repro/core/solver.py",
+                 "src/repro/core/__init__.py",
+                 "tests/test_api.py"):
+        assert _rule_hits(r3_api, path, src) == [
+            ("R3", 2), ("R3", 8), ("R3", 9), ("R3", 12)]
 
 
 # --- R4: while_loop body hygiene -------------------------------------
@@ -263,7 +271,7 @@ def test_runner_checks_subset(tmp_path):
 def test_runner_list_rules(capsys):
     assert analysis_main(["--list-rules"]) == 0
     out = capsys.readouterr().out
-    for rid in ("R1", "R2", "R3", "R4", "J1", "J2", "J3", "J4"):
+    for rid in ("R1", "R2", "R3", "R4", "J1", "J2", "J3", "J4", "J5"):
         assert rid in out
 
 
@@ -297,6 +305,11 @@ def test_j3_vmem_model_healthy():
 
 def test_j4_retrace_budget_healthy():
     findings = jaxpr_checks.check_retrace_budget(ROOT)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_j5_overlap_interleave_healthy():
+    findings = jaxpr_checks.check_overlap_interleave(ROOT)
     assert findings == [], "\n".join(f.render() for f in findings)
 
 
@@ -342,17 +355,21 @@ def test_j2_catches_double_launch():
         return a + b
 
     findings = jaxpr_checks.check_pallas_counts(
-        ROOT, apply_fn=double, expected={"resident": 1})
+        ROOT, apply_fn=double, expected={"resident": 1},
+        compressions=("none",))
     assert [f.rule for f in findings] == ["J2"]
     assert "expected exactly 1" in findings[0].message
 
 
 def test_j2_catches_wrong_expectation():
     # Equivalent seeding from the other side: the healthy kernel vs a
-    # wrong declared count.
+    # wrong declared count — it must fire on every compression axis.
     findings = jaxpr_checks.check_pallas_counts(
         ROOT, expected={"unfused": 1})
-    assert [f.rule for f in findings] == ["J2"]
+    assert [f.rule for f in findings] == ["J2"] * 3
+    assert {c for c in ("'none'", "'two_row'", "'minimal'")
+            if any(c in f.message for f in findings)} \
+        == {"'none'", "'two_row'", "'minimal'"}
 
 
 def test_j3_catches_lying_policy():
@@ -403,6 +420,17 @@ def test_j4_catches_cache_defeat():
     rules = {f.rule for f in findings}
     assert rules == {"J4"}
     assert any("traces" in f.message for f in findings)
+
+
+def test_j5_catches_serialized_schedule():
+    # The fused schedule is the built-in violation: each of its kernels
+    # consumes every face exchanged before it (0 faces left in flight),
+    # so the per-kernel overlap requirement fails for both hops.
+    findings = jaxpr_checks.check_overlap_interleave(ROOT, overlap="fused")
+    rules = [f.rule for f in findings]
+    assert rules and set(rules) == {"J5"}
+    assert any("serialized behind the halo exchange" in f.message
+               for f in findings)
 
 
 def test_run_jaxpr_checks_validates_ids():

@@ -1,8 +1,7 @@
 """Public API (`repro.api`): spec validation, the bind-once
 WilsonMatrix pytree (flatten/unflatten, jit-argument no-retrace,
-rebuild-from-leaves), SolveSession compiled-solve caching (exactly one
-trace for N same-shape solves, per backend), and the solve_wilson_eo
-deprecation shim."""
+rebuild-from-leaves), and SolveSession compiled-solve caching (exactly
+one trace for N same-shape solves, per backend)."""
 import dataclasses
 
 import jax
@@ -362,7 +361,7 @@ def test_session_refined_solve_cached():
     assert krow["kind"] == "refined" and krow["solves"] == 2
 
 
-# --- one-shot convenience + deprecation shim -------------------------
+# --- one-shot convenience --------------------------------------------
 
 
 def test_api_one_shot_solve():
@@ -373,47 +372,12 @@ def test_api_one_shot_solve():
     assert bool(res.converged)
 
 
-def test_solve_wilson_eo_is_deprecation_shim():
-    """The legacy entry point warns (once per process) and matches the
-    api path bit-for-bit — it IS a one-shot session underneath."""
-    Ue, Uo, e, o = make_eo(seed=19)
-    solver._DEPRECATION_WARNED = False
-    with pytest.warns(DeprecationWarning, match="repro.api"):
-        xe, xo, res = solver.solve_wilson_eo(
-            Ue, Uo, e, o, KAPPA, method="bicgstab", tol=1e-5)
-    xe2, xo2, res2 = api.solve(
-        Ue, Uo, e, o, KAPPA, backend="jnp",
-        spec=api.SolveSpec(method="bicgstab", tol=1e-5))
-    np.testing.assert_array_equal(np.asarray(xe), np.asarray(xe2))
-    np.testing.assert_array_equal(np.asarray(xo), np.asarray(xo2))
-    assert int(res.iterations) == int(res2.iterations)
+def test_solve_wilson_eo_shim_is_gone():
+    """The deprecated kwarg-sprawl entry point reached its removal
+    horizon (PR 7): the symbol must not exist anywhere — ``api.solve``
+    / SolveSession is the one-shot surface now (lint rule R3 enforces
+    the same repo-wide)."""
+    import repro.core as core
 
-
-def test_shim_batched_via_explicit_fns():
-    """The legacy explicit-callable wiring also supports batched sources
-    (through the automatic vmap fallback of the identity domain).
-
-    Shim-only surface: ``apply_dhat_fn``-style overrides have no
-    repro.api equivalent and are deleted together with the shim.
-    """
-    Ue, Uo, e, o = make_eo(seed=51, nrhs=2)
-    xe, xo, res = solver.solve_wilson_eo(
-        Ue, Uo, e, o, KAPPA, method="bicgstab", tol=1e-5,
-        apply_dhat_fn=None)   # pure evenodd reference ops
-    assert res.converged.shape == (2,)
-    assert bool(res.converged.all())
-    xe_1, _, _ = solver.solve_wilson_eo(Ue, Uo, e[0], o[0], KAPPA,
-                                        method="bicgstab", tol=1e-5)
-    d = float(jnp.linalg.norm(xe[0] - xe_1) / jnp.linalg.norm(xe_1))
-    assert d < 1e-4, d
-
-
-def test_shim_inner_dtype_rejects_explicit_operator_fns():
-    """Mixed precision rebuilds the operator from the gauge field; a
-    silent mismatch with the shim's explicit *_fn overrides must be an
-    error (shim-only surface, deleted together with the shim)."""
-    Ue, Uo, e, o = make_eo(seed=45)
-    with pytest.raises(ValueError, match="operator overrides"):
-        solver.solve_wilson_eo(
-            Ue, Uo, e, o, KAPPA, inner_dtype="f32",
-            apply_dhat_fn=lambda v: v)
+    assert not hasattr(solver, "solve_wilson_eo")
+    assert not hasattr(core, "solve_wilson_eo")

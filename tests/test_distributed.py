@@ -56,6 +56,43 @@ def test_distributed_dhat_all_modes():
     assert out.count("OK") == 4
 
 
+def test_distributed_interior_overlap_multidevice():
+    """The comms/compute-overlap schedule on a real 2x2 device mesh:
+    faces actually cross device boundaries (not the 1-device
+    self-permute), with and without compressed links."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.core import su3, evenodd
+        from repro.kernels import layout, ops, ref
+        from repro.distributed import qcd
+        from repro import compat
+        T,Z,Y,X = 8,8,4,8
+        U = su3.random_gauge(jax.random.PRNGKey(2), (T,Z,Y,X))
+        psi = (jax.random.normal(jax.random.PRNGKey(3), (T,Z,Y,X,4,3))
+               + 1j*jax.random.normal(jax.random.PRNGKey(4),
+                                      (T,Z,Y,X,4,3))).astype(jnp.complex64)
+        e, _ = evenodd.pack(psi)
+        Ue, Uo = evenodd.pack_gauge(U)
+        ep = layout.spinor_to_planar(e)
+        Uep0, Uop0 = ops.make_planar_fields(Ue, Uo)
+        want = ref.apply_dhat_planar_ref(Uep0, Uop0, ep, 0.13)
+        mesh = compat.make_mesh((2,2), ("data","model"))   # Tl=Zl=4 >= 3
+        for gc in ("none", "two_row"):
+            Uep, Uop = ops.make_planar_fields(Ue, Uo, compression=gc)
+            part = qcd.QCDPartition.for_mesh(
+                mesh, backend="jnp_planar", overlap="interior",
+                interpret=True)
+            dhat = jax.jit(qcd.make_dhat_fn(part, 0.13))
+            got = dhat(jax.device_put(Uep, part.gauge_sharding()),
+                       jax.device_put(Uop, part.gauge_sharding()),
+                       jax.device_put(ep, part.spinor_sharding()))
+            err = float(jnp.max(jnp.abs(got - want)))
+            assert err < 1e-5, (gc, err)
+            print("OK", gc, err)
+    """, n_devices=4)
+    assert out.count("OK") == 2
+
+
 def test_distributed_solver_matches_single():
     out = run_py("""
         import jax, jax.numpy as jnp

@@ -72,7 +72,7 @@ def test_cg_iteration_monotone():
 
 
 def test_cg_recompute_every_converges_to_same_solution():
-    """Periodic true-residual recompute (SolverConfig.recompute_every)
+    """Periodic true-residual recompute (``recompute_every``)
     doesn't change what CG converges to, and still converges."""
     n = 64
     key = jax.random.PRNGKey(3)
