@@ -23,7 +23,7 @@ def _build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="AST convention linter (R1-R4) + jaxpr invariant "
-                    "analyzers (J1-J5) for the Wilson-kernel repo.")
+                    "analyzers (J1-J6) for the Wilson-kernel repo.")
     p.add_argument("--root", default=".",
                    help="repository root to analyze (default: cwd)")
     p.add_argument("--baseline", metavar="PATH",

@@ -27,6 +27,13 @@ can see:
   scenario (repeat solves, a shape change, a spec change) performs
   exactly as many traces as distinct cache keys — the bind-once
   contract expressed as a hard number.
+* **J6 — divergence guard in every Krylov loop.**  Every
+  ``while_loop`` traced out of :func:`repro.core.solver._run_krylov`
+  (all methods, batched and unbatched) carries an ``is_finite``
+  primitive in its *cond* jaxpr — the structural footprint of the
+  non-finite divergence guard.  A refactor that drops the guard turns
+  a single SDC-corrupted residual back into max_iters of silent NaN
+  iterations; it shows up here, not in any healthy-path test.
 * **J5 — comms/compute overlap schedule.**  The distributed operator
   traced with ``overlap="interior"`` keeps its interior kernels
   *independent* of the in-flight halo exchange: inside the
@@ -61,9 +68,10 @@ _ANCHORS = {
     "J3": ("src/repro/kernels/wilson_stencil.py", "def fused_dhat_policy"),
     "J4": ("src/repro/api/session.py", "class SolveSession"),
     "J5": ("src/repro/distributed/qcd.py", "def make_dhat_fn"),
+    "J6": ("src/repro/core/solver.py", "def _run_krylov"),
 }
 
-ALL_JAXPR_CHECKS = ("J1", "J2", "J3", "J4", "J5")
+ALL_JAXPR_CHECKS = ("J1", "J2", "J3", "J4", "J5", "J6")
 
 _LATTICE = (4, 4, 4, 8)          # (X, Y, Z, T) — matches the test suite
 _KAPPA = 0.13
@@ -618,6 +626,90 @@ def check_overlap_interleave(root: str, *,
     return findings
 
 
+# --- J6: divergence guard present in every Krylov while_loop ---------
+
+
+def check_nonfinite_guard(root: str, *,
+                          run_fn: Optional[Callable] = None,
+                          methods: Optional[Sequence[str]] = None,
+                          ) -> List[Finding]:
+    """J6: every Krylov ``while_loop`` carries the non-finite guard.
+
+    Traces :func:`repro.core.solver._run_krylov` for every method,
+    batched and unbatched, over a dense SPD operator, and asserts each
+    ``while`` equation's *cond* jaxpr contains an ``is_finite``
+    primitive — the structural footprint of the divergence guard
+    (``jnp.isfinite(rr)`` in the loop condition).  Without it a single
+    corrupted residual runs the full ``max_iters`` of NaN arithmetic
+    and exits looking merely "not converged".
+
+    ``run_fn(method, batched) -> SolveResult`` overrides the traced
+    entry so the self-tests can seed a guard-free solver
+    (``guard=False``).
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import solver
+
+    if methods is None:
+        methods = solver.KRYLOV_METHODS
+
+    n = 24
+    key = jax.random.PRNGKey(0)
+    G = jax.random.normal(key, (n, n), dtype=jnp.float32)
+    A = G @ G.T + n * jnp.eye(n, dtype=jnp.float32)
+    b1 = jax.random.normal(jax.random.fold_in(key, 1), (n,),
+                           dtype=jnp.float32)
+    bb = jax.random.normal(jax.random.fold_in(key, 2), (3, n),
+                           dtype=jnp.float32)
+
+    if run_fn is None:
+        def run_fn(method, batched):
+            # A is symmetric, so op == op^dag; batched operands carry a
+            # leading rhs axis (the solvers reduce per column).
+            if batched:
+                return solver._run_krylov(
+                    method, lambda v: v @ A.T, lambda v: v @ A.T, bb,
+                    tol=1e-6, max_iters=8, recompute_every=0,
+                    batched=True)
+            return solver._run_krylov(
+                method, lambda v: A @ v, lambda v: A @ v, b1,
+                tol=1e-6, max_iters=8, recompute_every=0,
+                batched=False)
+
+    findings: List[Finding] = []
+    for method in methods:
+        for batched in (False, True):
+            jaxpr = jax.make_jaxpr(
+                lambda m=method, b=batched: run_fn(m, b))()
+            whiles = 0
+            unguarded = 0
+            for eqn in _walk_eqns(jaxpr):
+                if eqn.primitive.name != "while":
+                    continue
+                whiles += 1
+                cond = eqn.params.get("cond_jaxpr")
+                if not any(e.primitive.name == "is_finite"
+                           for e in _walk_eqns(cond)):
+                    unguarded += 1
+            label = f"method {method!r} ({'batched' if batched else 'single'})"
+            if whiles == 0:
+                findings.append(_finding(
+                    root, "J6",
+                    f"{label}: no while_loop in the traced Krylov solve "
+                    "— the iteration is expected to lower to "
+                    "lax.while_loop (did the trace entry change?)"))
+            elif unguarded:
+                findings.append(_finding(
+                    root, "J6",
+                    f"{label}: {unguarded} of {whiles} while_loop(s) "
+                    "have no is_finite primitive in their cond jaxpr — "
+                    "the non-finite divergence guard is structurally "
+                    "absent, so a corrupted residual would run the "
+                    "full iteration budget as silent NaN arithmetic"))
+    return findings
+
+
 # --- runner entry -----------------------------------------------------
 
 _CHECK_FNS = {
@@ -626,6 +718,7 @@ _CHECK_FNS = {
     "J3": check_vmem_model,
     "J4": check_retrace_budget,
     "J5": check_overlap_interleave,
+    "J6": check_nonfinite_guard,
 }
 
 

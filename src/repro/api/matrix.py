@@ -79,11 +79,18 @@ class WilsonMatrix:
         # pytree leaf (an unflattened matrix loses it and falls back to
         # reconstructing from the — possibly dtype-rounded — leaves).
         self._exact_gauge = None
+        # Resilience state (set by bind/fallback_next; defaults keep
+        # from_ops/unflatten construction paths untouched).
+        self.fallback_enabled = False
+        self.fallback_events: Tuple[Tuple[str, str], ...] = ()
+        self.requested_backend = backend.name if backend else None
+        self.gauge_audit = None
 
     # --- construction -------------------------------------------------
 
     @classmethod
     def bind(cls, U_e, U_o, kappa: float, backend="auto",
+             validate: str = "none", fallback: bool = False,
              **bind_opts) -> "WilsonMatrix":
         """Bind the named backend to complex even/odd gauge halves.
 
@@ -93,8 +100,67 @@ class WilsonMatrix:
         in the (hashable) spec — e.g. a ``mesh``/``partition`` for the
         distributed backend.  All expensive bind-once work (layout
         conversion, device placement) happens in this call.
+
+        ``validate`` audits the gauge for SU(3) unitarity / finiteness
+        before binding: ``"none"`` skips, ``"warn"`` emits a
+        ``RuntimeWarning`` on defects, ``"repair"`` projects defective
+        links back onto SU(3) (identity-replacing non-finite ones) so
+        that even *compressed* codecs pack the repaired links.  The
+        audit report lands on ``.gauge_audit``.
+
+        ``fallback=True`` arms graceful degradation: if binding fails,
+        the declared fallback chain (see
+        :func:`repro.resilience.fallback_chain`) is walked here; if a
+        *solve* later fails, :class:`~repro.api.SolveSession` walks it
+        via :meth:`fallback_next`.  Degradation is recorded on
+        ``.fallback_events`` and the ``.degraded`` flag.
         """
+        if validate not in ("none", "warn", "repair"):
+            raise ValueError(
+                f"validate must be 'none'|'warn'|'repair', "
+                f"got {validate!r}")
+        audit = None
+        if validate != "none":
+            from repro.resilience import validate as _rv
+            if validate == "repair":
+                U_e, U_o, audit = _rv.repair_gauge(U_e, U_o)
+            else:
+                audit = _rv.audit_gauge(U_e, U_o)
+                if not audit.ok:
+                    import warnings
+                    warnings.warn(
+                        f"gauge fails SU(3) audit: {audit}; bind with "
+                        "validate='repair' to project links back onto "
+                        "the group", RuntimeWarning, stacklevel=2)
+
         spec = BackendSpec.coerce(backend).validated()
+        requested = spec.name
+        if fallback:
+            from repro.resilience import adapt_spec, fallback_chain
+            events = []
+            last_exc: Optional[BaseException] = None
+            for i, name in enumerate(fallback_chain(spec.name)):
+                try_spec = spec if i == 0 else adapt_spec(spec, name)
+                try_opts = bind_opts if i == 0 else {}
+                try:
+                    m = cls._bind_one(U_e, U_o, kappa, try_spec,
+                                      try_opts)
+                    break
+                except Exception as exc:      # noqa: BLE001 — chain
+                    events.append((name, repr(exc)))
+                    last_exc = exc
+            else:
+                raise last_exc
+            m.fallback_events = tuple(events)
+        else:
+            m = cls._bind_one(U_e, U_o, kappa, spec, bind_opts)
+        m.fallback_enabled = bool(fallback)
+        m.requested_backend = requested
+        m.gauge_audit = audit
+        return m
+
+    @classmethod
+    def _bind_one(cls, U_e, U_o, kappa, spec, bind_opts):
         lattice = LatticeSpec.from_eo_gauge(U_e)
         opts = {**spec.factory_opts(), **bind_opts}
         gauge = backends.prepare_gauge(spec.name, U_e, U_o, **opts)
@@ -109,6 +175,40 @@ class WilsonMatrix:
         # by ~1e-3), so reconstructing the f64 reference operator from
         # them would make the "true residual" target the wrong gauge.
         m._exact_gauge = (U_e, U_o)
+        return m
+
+    # --- graceful degradation ------------------------------------------
+
+    @property
+    def degraded(self) -> bool:
+        """True when this matrix is not running on the backend it was
+        asked for (a fallback fired at bind or solve time)."""
+        return bool(self.fallback_events) or (
+            self.requested_backend is not None
+            and self.requested_backend != self.backend.name)
+
+    def fallback_next(self, reason: str = "") -> Optional["WilsonMatrix"]:
+        """Rebind this matrix onto the next backend in its declared
+        fallback chain, recording ``(failed_backend, reason)``.
+
+        Returns ``None`` when the chain is exhausted (or the matrix
+        was wrapped from bare ops and cannot rebind).  Used by
+        :class:`~repro.api.SolveSession` to recover from solve-time
+        failures without losing the gauge or the session."""
+        if self._exact_gauge is None:
+            return None
+        from repro.resilience import adapt_spec, fallback_chain
+        chain = fallback_chain(self.backend.name)
+        if len(chain) < 2:
+            return None
+        spec = adapt_spec(self.backend, chain[1])
+        U_e, U_o = self._exact_gauge
+        m = self._bind_one(U_e, U_o, self.kappa, spec, {})
+        m.fallback_enabled = self.fallback_enabled
+        m.requested_backend = self.requested_backend
+        m.gauge_audit = self.gauge_audit
+        m.fallback_events = self.fallback_events + (
+            (self.backend.name, reason),)
         return m
 
     @classmethod

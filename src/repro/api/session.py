@@ -11,15 +11,20 @@ needs, and the one the paper buys on A64FX by packing the gauge layout
 once outside the hot loop.
 
 ``session.stats()`` is the observability hook: trace counts (compiles),
-cache hits/misses, and per-key first-solve vs steady-state wall times.
+cache hits/misses, per-key first-solve vs steady-state wall times, and
+the resilience ledger — backend fallbacks taken, the ``degraded`` flag,
+and per-refined-key outer-iteration / precision-escalation histories.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
+from repro import backends
 from repro.core import solver as _solver
 
 from .matrix import WilsonMatrix
@@ -29,12 +34,14 @@ __all__ = ["SolveSession"]
 
 
 class _CacheEntry:
-    __slots__ = ("fn", "kind", "times")
+    __slots__ = ("fn", "kind", "times", "outer", "escalations")
 
     def __init__(self, fn, kind):
         self.fn = fn
         self.kind = kind          # "plain" | "refined"
         self.times = []           # per-solve wall seconds, in call order
+        self.outer = []           # refined: outer iterations per solve
+        self.escalations = []     # refined: dtype rungs climbed per solve
 
 
 class SolveSession:
@@ -70,14 +77,36 @@ class SolveSession:
         self.default_spec = spec if spec is not None else SolveSpec()
         self._cache = {}
         self._counters = {"solves": 0, "traces": 0, "cache_hits": 0,
-                          "cache_misses": 0}
+                          "cache_misses": 0, "fallbacks": 0}
 
     # --- solve --------------------------------------------------------
 
     def solve(self, eta_e, eta_o, spec: Optional[SolveSpec] = None):
         """Solve ``D_W xi = eta`` for one source pair (or a leading-axis
-        RHS block); returns ``(xi_e, xi_o, result)``."""
+        RHS block); returns ``(xi_e, xi_o, result)``.
+
+        When the bound matrix was created with ``fallback=True``, a
+        solve-time failure (kernel compile error, backend fault) walks
+        the declared fallback chain: the matrix is rebound onto the
+        next backend, the compiled-solve cache is flushed (it belonged
+        to the failed backend), and the solve retries — recorded in
+        ``stats()["fallbacks"]`` and the matrix's ``fallback_events``.
+        """
         spec = self.default_spec if spec is None else spec
+        while True:
+            try:
+                return self._solve_once(eta_e, eta_o, spec)
+            except Exception as exc:   # noqa: BLE001 — chain walk
+                if not getattr(self.matrix, "fallback_enabled", False):
+                    raise
+                nxt = self.matrix.fallback_next(repr(exc))
+                if nxt is None:
+                    raise
+                self.matrix = nxt
+                self._cache.clear()
+                self._counters["fallbacks"] += 1
+
+    def _solve_once(self, eta_e, eta_o, spec: SolveSpec):
         if self.matrix.lattice is not None:
             batched = spec.validate_rhs(eta_e, eta_o, self.matrix.lattice)
         else:
@@ -86,16 +115,9 @@ class SolveSession:
 
         t0 = time.perf_counter()
         entry = self._cache.get(key)
+        hit = entry is not None
         if entry is None:
-            # Count the miss only once the build succeeded — a failed
-            # build (e.g. refined spec without x64) leaves the counters
-            # untouched so a later successful retry isn't double-counted.
             entry = self._build(spec, batched)
-            self._cache[key] = entry
-            self._counters["cache_misses"] += 1
-        else:
-            self._counters["cache_hits"] += 1
-        self._counters["solves"] += 1
 
         if entry.kind == "refined":
             xi_e, xi_o, res = entry.fn(eta_e, eta_o)
@@ -114,8 +136,44 @@ class SolveSession:
             xi_o = from_dom(v_xi_o).astype(eta_o.dtype)
             res = res._replace(x=xi_e)
         jax.block_until_ready((xi_e, xi_o))
+
+        # Commit cache + counters only after the run succeeded: a build
+        # or execution failure (refined spec without x64, an injected
+        # kernel fault) must leave both untouched so a fallback retry —
+        # or a later successful call — isn't double-counted.
+        self._cache[key] = entry
+        self._counters["cache_hits" if hit else "cache_misses"] += 1
+        self._counters["solves"] += 1
+        if entry.kind == "refined":
+            entry.outer.append(int(res.outer_iterations))
+            entry.escalations.append(tuple(res.escalations))
         entry.times.append(time.perf_counter() - t0)
         return xi_e, xi_o, res
+
+    def _escalation_factory(self):
+        """A ``bops_factory`` for the refined solve's precision ladder:
+        rebinds the *session's* backend at the requested rung when its
+        capabilities allow, else drops to the jnp reference operator at
+        the matching complex dtype (always available)."""
+        matrix = self.matrix
+
+        def factory(rung: str):
+            bspec = matrix.backend
+            caps = backends.backend_info(bspec.name)
+            U_e, U_o = matrix.gauge_complex(jnp.complex128)
+            if rung in caps.dtypes:
+                spec2 = dataclasses.replace(bspec, dtype=rung)
+                extra = (matrix._opaque.value
+                         if (matrix._rebuild == "native"
+                             and matrix._opaque) else {})
+                return backends.make_wilson_ops(
+                    bspec.name, U_e, U_o,
+                    **{**spec2.factory_opts(), **extra})
+            cdt = jnp.complex128 if rung == "f64" else jnp.complex64
+            return backends.make_wilson_ops(
+                "jnp", U_e.astype(cdt), U_o.astype(cdt))
+
+        return factory
 
     def _build(self, spec: SolveSpec, batched: bool) -> _CacheEntry:
         if spec.inner_dtype is not None:
@@ -130,14 +188,23 @@ class SolveSession:
                 max_iters=spec.max_iters,
                 recompute_every=spec.recompute_every,
                 inner_tol=spec.inner_tol, max_outer=spec.max_outer,
-                batched=batched)
+                batched=batched, guard=spec.guard,
+                stagnation_window=spec.stagnation_window,
+                max_restarts=spec.max_restarts,
+                inner_dtype=spec.inner_dtype,
+                escalate=spec.escalate,
+                bops_factory=(self._escalation_factory()
+                              if spec.escalate else None))
             self._counters["traces"] += 1
             return _CacheEntry(fn, "refined")
 
         native = _solver.make_native_solve(
             self.matrix.ops, self.matrix.kappa, method=spec.method,
             tol=spec.tol, max_iters=spec.max_iters,
-            recompute_every=spec.recompute_every, batched=batched)
+            recompute_every=spec.recompute_every, batched=batched,
+            guard=spec.guard,
+            stagnation_window=spec.stagnation_window,
+            max_restarts=spec.max_restarts)
         counters = self._counters
 
         def counted(v_e, v_o):
@@ -162,12 +229,23 @@ class SolveSession:
         for (spec, shape, dtype), entry in self._cache.items():
             times = entry.times
             steady = sorted(times[1:])
-            keys["|".join([spec.cache_token(), f"shape={shape}",
-                           f"dtype={dtype}"])] = {
+            row = {
                 "kind": entry.kind,
                 "solves": len(times),
                 "first_solve_s": times[0] if times else None,
                 "steady_state_s": (steady[len(steady) // 2]
                                    if steady else None),
             }
-        return {**self._counters, "keys": keys}
+            if entry.kind == "refined":
+                row["outer_iterations"] = list(entry.outer)
+                row["escalations"] = [list(e) for e in entry.escalations]
+            keys["|".join([spec.cache_token(), f"shape={shape}",
+                           f"dtype={dtype}"])] = row
+        return {
+            **self._counters,
+            "backend": self.matrix.backend.name,
+            "degraded": bool(getattr(self.matrix, "degraded", False)),
+            "fallback_events": list(
+                getattr(self.matrix, "fallback_events", ()) or ()),
+            "keys": keys,
+        }

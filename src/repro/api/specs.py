@@ -224,6 +224,13 @@ class SolveSpec:
     against it.  ``inner_dtype`` switches to mixed-precision iterative
     refinement (inner Krylov in that dtype, outer f64 true-residual loop
     — needs jax x64).
+
+    Resilience knobs: ``guard`` enables the in-loop divergence guards
+    (non-finite freeze + stagnation restart — see
+    :mod:`repro.core.solver`), tuned by ``stagnation_window`` /
+    ``max_restarts``; ``escalate`` lets a stalling refined solve climb
+    the inner-dtype precision ladder
+    (:data:`repro.core.solver.ESCALATION_LADDER`).
     """
 
     METHODS = _solver.KRYLOV_METHODS
@@ -236,6 +243,10 @@ class SolveSpec:
     inner_dtype: Optional[str] = None
     inner_tol: float = 1e-4
     max_outer: int = 25
+    guard: bool = True
+    stagnation_window: int = _solver.STAGNATION_WINDOW
+    max_restarts: int = _solver.MAX_RESTARTS
+    escalate: bool = True
 
     def __post_init__(self):
         if self.method not in self.METHODS:
@@ -262,6 +273,13 @@ class SolveSpec:
         if self.max_outer < 1:
             raise ValueError(
                 f"max_outer must be >= 1; got {self.max_outer}")
+        if self.stagnation_window < 2:
+            raise ValueError(
+                f"stagnation_window must be >= 2; got "
+                f"{self.stagnation_window}")
+        if self.max_restarts < 0:
+            raise ValueError(
+                f"max_restarts must be >= 0; got {self.max_restarts}")
 
     def validate_rhs(self, eta_e, eta_o, lattice: LatticeSpec) -> bool:
         """Check a source pair against the lattice and ``nrhs``;
@@ -298,4 +316,13 @@ class SolveSpec:
         if self.inner_dtype is not None:
             parts.append(f"inner-{self.inner_dtype}"
                          f"@{self.inner_tol:g}x{self.max_outer}")
+            if not self.escalate:
+                parts.append("noesc")
+        if not self.guard:
+            parts.append("noguard")
+        else:
+            if self.stagnation_window != _solver.STAGNATION_WINDOW:
+                parts.append(f"sw{self.stagnation_window}")
+            if self.max_restarts != _solver.MAX_RESTARTS:
+                parts.append(f"mr{self.max_restarts}")
         return ":".join(parts)

@@ -252,6 +252,12 @@ class BackendCapabilities:
       factory's ``gauge_compression=`` knob accepts (``"none"`` full
       18-real links; ``"two_row"`` 12-real; ``"minimal"`` 8-real —
       compressed planes are expanded in-register by the kernels).
+    * ``fallback`` — name of the next-best backend to rebind onto when
+      this one fails to bind or compile (``None`` ends the chain).
+      Declared here so the degradation order is registry data;
+      :func:`repro.resilience.fallback_chain` walks the links and
+      ``WilsonMatrix.bind(fallback=True)`` / ``SolveSession`` take
+      them.
     """
 
     name: str
@@ -262,6 +268,7 @@ class BackendCapabilities:
     supports_interpret: bool = False
     policies: tuple = ()
     gauge_compressions: tuple = ("none",)
+    fallback: "str | None" = None
     description: str = ""
 
 

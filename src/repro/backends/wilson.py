@@ -392,7 +392,7 @@ register_backend(
         name="pallas", domain="planar", gauge_form="planar",
         batched_kernels=True, dtypes=_PALLAS_DTYPES,
         supports_interpret=True, policies=("unfused",),
-        gauge_compressions=_GAUGE_COMPRESSIONS,
+        gauge_compressions=_GAUGE_COMPRESSIONS, fallback="jnp",
         description="planar Pallas stencil, one kernel per hopping "
                     "block (two kernels per Dhat)"),
     native_factory=_pallas_native_factory(False, "pallas"),
@@ -404,7 +404,7 @@ register_backend(
         batched_kernels=True, dtypes=_PALLAS_DTYPES,
         supports_interpret=True,
         policies=("auto", "resident", "stream", "unfused"),
-        gauge_compressions=_GAUGE_COMPRESSIONS,
+        gauge_compressions=_GAUGE_COMPRESSIONS, fallback="pallas",
         description="Dhat as ONE kernel; three-way auto policy sized by "
                     "dtype and nrhs (resident VMEM scratch -> streaming "
                     "plane window -> two-kernel fallback)"),
@@ -417,6 +417,7 @@ register_backend(
         batched_kernels=True, dtypes=_PALLAS_DTYPES,
         supports_interpret=True, policies=("stream",),
         gauge_compressions=_GAUGE_COMPRESSIONS,
+        fallback="pallas_fused",
         description="streaming plane-window fused Dhat, forced: VMEM "
                     "holds a 4-row ring of odd-intermediate t-planes "
                     "(no T-dependent volume cap)"),
@@ -431,7 +432,7 @@ register_backend(
         policies=("local:jnp_planar", "local:jnp", "local:pallas",
                   "overlap:fused", "overlap:interior",
                   "overlap:split"),
-        gauge_compressions=_GAUGE_COMPRESSIONS,
+        gauge_compressions=_GAUGE_COMPRESSIONS, fallback="jnp",
         description="shard_map over a device mesh with z/t halo "
                     "exchange; gauge placed once at bind, one batched "
                     "exchange per RHS block (overlappable with the "

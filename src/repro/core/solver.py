@@ -27,6 +27,19 @@ Two production features beyond the single-RHS f32 path:
   (see :data:`COMPENSATED_REDUCTIONS`), so ``inner_dtype="bf16"``
   converges at ``inner_tol`` values where naive bf16 accumulation
   stalls on saturated norms.
+* **Divergence guards** (``guard=True``, the default) — every
+  ``while_loop`` cond carries a non-finite check on the residual (the
+  structural invariant analysis rule J6 asserts), so a poisoned state
+  can never buy another iteration, and the loop body freezes a
+  non-finite column/solve **bit-exactly** at its last finite iterate
+  via ``where``-selects (the alpha-zeroing freeze alone cannot:
+  ``0 * NaN = NaN``).  A residual that makes no new minimum for
+  ``stagnation_window`` consecutive iterations triggers a
+  deterministic restart — the Krylov space is re-seeded from the
+  current iterate's true residual — up to ``max_restarts`` times,
+  after which the column freezes.  Both paths report through the
+  ``diverged`` field of :class:`SolveResult` instead of the old
+  silent NaN exit whose ``converged`` came from a NaN comparison.
 """
 from __future__ import annotations
 
@@ -133,11 +146,50 @@ def _nz(d, tiny):
     return jnp.where(jnp.abs(d) > tiny, d, jnp.ones_like(d))
 
 
+# Divergence-guard defaults (see the module docstring): a column that
+# makes no new residual minimum for a full window is stagnating; it gets
+# this many deterministic restarts before freezing as diverged.
+STAGNATION_WINDOW = 50
+MAX_RESTARTS = 1
+
+
+def _swhere(flag, new, old):
+    """Whole-solve freeze-select over a pytree: ``new`` where the scalar
+    ``flag`` else ``old``.  The guard's bit-exact freeze — unlike the
+    alpha-zeroing freeze, a ``where`` cannot be poisoned by a NaN on the
+    rejected side (``0 * NaN = NaN`` would)."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(flag, n, o), new, old)
+
+
+def _bwhere(mask, new, old):
+    """Per-column freeze-select: ``mask`` is ``(nrhs,)``, broadcast
+    against every leaf of the batched pytrees."""
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(_bb(mask, n), n, o), new, old)
+
+
 class SolveResult(NamedTuple):
     x: jax.Array
     iterations: jnp.ndarray
     residual: jnp.ndarray      # relative residual |r| / |b|
     converged: jnp.ndarray
+    # Divergence-guard verdict (scalar, or per-column for the batched
+    # solvers): the state went non-finite or stagnated past the restart
+    # budget and was frozen at its last good iterate.  Disjoint from
+    # ``converged``; a plain breakdown freeze stays (False, False).
+    diverged: jnp.ndarray = False
+
+
+def _result(x, iters, rel, conv, div) -> SolveResult:
+    """Assemble a SolveResult with the exit-time divergence fold: a
+    non-finite *relative residual* is divergence even when the loop
+    never tripped a guard (guard=False, or a NaN RHS whose column was
+    never active) — the old silent-NaN exit reported ``converged`` from
+    a NaN comparison instead."""
+    div = jnp.logical_or(div, jnp.logical_not(jnp.isfinite(rel)))
+    return SolveResult(x, iters, rel,
+                       jnp.logical_and(conv, jnp.logical_not(div)), div)
 
 
 class RefinedResult(NamedTuple):
@@ -148,6 +200,9 @@ class RefinedResult(NamedTuple):
     counts applications of the f64 operator (the pure-f64 solve pays
     ~2 per Krylov iteration; refinement pays 1 per outer pass), and
     ``inner_iterations`` the total inner-dtype Krylov iterations.
+    ``escalations`` records each precision-escalation step the outer
+    loop took (inner-dtype ladder rung names, in order) and
+    ``diverged`` mirrors :class:`SolveResult`.
     """
     x: jax.Array
     iterations: jnp.ndarray
@@ -156,16 +211,23 @@ class RefinedResult(NamedTuple):
     outer_iterations: int
     f64_applies: int
     inner_iterations: int
+    diverged: jnp.ndarray = False
+    escalations: tuple = ()
 
 
 def cg(op: Callable, b, x0=None, *, tol: float = 1e-6, max_iters: int = 1000,
-       recompute_every: int = 0) -> SolveResult:
+       recompute_every: int = 0, guard: bool = True,
+       stagnation_window: int = STAGNATION_WINDOW,
+       max_restarts: int = MAX_RESTARTS) -> SolveResult:
     """Conjugate gradients for a Hermitian positive-definite ``op``.
 
     ``recompute_every > 0`` replaces the recursively-updated residual
     with the true residual ``b - op(x)`` every that many iterations
     (inside the ``while_loop``), bounding floating-point drift on long
-    solves (0 = never).
+    solves (0 = never).  ``guard`` enables the divergence guard
+    (non-finite freeze + stagnation restart, see the module docstring);
+    ``guard=False`` keeps the bare recurrence for A/B overhead
+    measurements and the J6 seeded-violation test.
     """
     x = x0 if x0 is not None else _scale(0.0, b)
     r = _axpy(-1.0, op(x), b)
@@ -176,46 +238,94 @@ def cg(op: Callable, b, x0=None, *, tol: float = 1e-6, max_iters: int = 1000,
     tol2 = (tol * tol) * b2
 
     def cond(state):
-        _, _, _, rr, good, k = state
-        return jnp.logical_and(
+        x, r, p, rr, good, div, best, since, restarts, k = state
+        go = jnp.logical_and(
             jnp.logical_and(rr > tol2, k < max_iters), good)
+        if guard:
+            # The non-finite guard lives in the COND (J6 asserts the
+            # is_finite primitive here): a poisoned residual can never
+            # buy another iteration.
+            go = jnp.logical_and(go, jnp.logical_and(
+                jnp.isfinite(rr), jnp.logical_not(div)))
+        return go
 
     def body(state):
-        x, r, p, rr, good, k = state
+        x, r, p, rr, good, div, best, since, restarts, k = state
         ap = op(p)
         pap = _vdot(p, ap).real
         # Breakdown guard: pap ~ 0 (numerically nullspace direction)
         # would scale the update by garbage — freeze and exit instead.
         ok = pap > tiny
         alpha = jnp.where(ok, rr / _nz(pap, tiny), 0.0)
-        x = _axpy(alpha, p, x)
-        r = _axpy(-alpha, ap, r)
+        x1 = _axpy(alpha, p, x)
+        r1 = _axpy(-alpha, ap, r)
         if recompute_every:
-            r = jax.lax.cond(
+            r1 = jax.lax.cond(
                 (k + 1) % recompute_every == 0,
                 lambda xk: _axpy(-1.0, op(xk), b),
-                lambda _: r, x)
-        rr_new = _norm2(r)
-        beta = rr_new / rr
-        p = _axpy(beta, p, r)
-        return x, r, p, rr_new, ok, k + 1
+                lambda _: r1, x1)
+        rr1 = _norm2(r1)
+        beta = rr1 / rr
+        p1 = _axpy(beta, p, r1)
+        if not guard:
+            return (x1, r1, p1, rr1, ok, div, best, since, restarts,
+                    k + 1)
+        # Non-finite freeze: keep the last finite iterate bit-exactly.
+        finite = jnp.isfinite(rr1)
+        x1 = _swhere(finite, x1, x)
+        r1 = _swhere(finite, r1, r)
+        p1 = _swhere(finite, p1, p)
+        rr1 = jnp.where(finite, rr1, rr)
+        div = jnp.logical_or(div, jnp.logical_not(finite))
+        # Stagnation: no new residual minimum for a full window ->
+        # deterministic restart (re-seed the Krylov space from the
+        # current iterate's true residual); past the restart budget,
+        # freeze and report diverged.
+        improved = rr1 < best
+        best = jnp.minimum(best, rr1)
+        since = jnp.where(improved, 0, since + 1)
+        stag = jnp.logical_and(finite, since >= stagnation_window)
+        restart = jnp.logical_and(stag, restarts < max_restarts)
 
-    state = (x, r, p, rr, jnp.bool_(True), jnp.int32(0))
-    x, r, p, rr, good, k = jax.lax.while_loop(cond, body, state)
+        def reseed(xk):
+            rt = _axpy(-1.0, op(xk), b)
+            return rt, _norm2(rt)
+
+        r1, rr1 = jax.lax.cond(restart, reseed,
+                               lambda _: (r1, rr1), x1)
+        p1 = _swhere(restart, r1, p1)
+        best = jnp.where(restart, rr1, best)
+        since = jnp.where(restart, 0, since)
+        restarts = restarts + restart.astype(jnp.int32)
+        div = jnp.logical_or(div, jnp.logical_and(
+            stag, jnp.logical_not(restart)))
+        return x1, r1, p1, rr1, ok, div, best, since, restarts, k + 1
+
+    state = (x, r, p, rr, jnp.bool_(True), jnp.bool_(False), rr,
+             jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    out = jax.lax.while_loop(cond, body, state)
+    x, rr, div, k = out[0], out[3], out[5], out[9]
     rel = jnp.sqrt(rr / jnp.maximum(b2, 1e-30))
-    return SolveResult(x, k, rel, rel <= tol)
+    return _result(x, k, rel, rel <= tol, div)
 
 
 def cg_batched(op: Callable, b, x0=None, *, tol: float = 1e-6,
-               max_iters: int = 1000,
-               recompute_every: int = 0) -> SolveResult:
+               max_iters: int = 1000, recompute_every: int = 0,
+               guard: bool = True,
+               stagnation_window: int = STAGNATION_WINDOW,
+               max_restarts: int = MAX_RESTARTS) -> SolveResult:
     """Batched CG: one operator application per iteration for the whole
     RHS block, per-column scalars, per-column convergence freezing.
 
     A column whose residual reaches tolerance has its updates zeroed
     (``alpha = beta = 0``) from then on — its ``x``/``r`` are frozen
-    bit-exactly while the remaining columns keep iterating.  Returns
-    per-column ``iterations`` / ``residual`` / ``converged``.
+    bit-exactly while the remaining columns keep iterating.  With
+    ``guard`` (default), a column that goes non-finite or stagnates
+    past the restart budget freezes the same way and reports through
+    the per-column ``diverged`` mask; healthy columns are untouched
+    (all scalars are per-column, so their trajectories are independent
+    of the poisoned one).  Returns per-column ``iterations`` /
+    ``residual`` / ``converged`` / ``diverged``.
     """
     x = x0 if x0 is not None else _scale(0.0, b)
     r = b if x0 is None else _axpy(-1.0, op(x), b)
@@ -224,15 +334,26 @@ def cg_batched(op: Callable, b, x0=None, *, tol: float = 1e-6,
     b2 = _bnorm2(b)
     tiny = _tiny(rr.dtype)
     tol2 = (tol * tol) * b2
+    # A non-finite source column is never active (NaN > tol2 is False):
+    # it sits at x = 0 with iters = 0 and exits through the diverged
+    # fold in _result.
     active = rr > tol2
     iters = jnp.zeros(rr.shape, jnp.int32)
+    div = jnp.logical_not(jnp.isfinite(rr)) if guard \
+        else jnp.zeros(rr.shape, bool)
 
     def cond(state):
-        *_, active, _, k = state
+        x, r, p, rr, active, iters, div, best, since, restarts, k = state
+        if guard:
+            # Only columns with a finite residual can buy iterations
+            # (per-column analogue of the scalar guard; J6 asserts the
+            # is_finite primitive structurally).
+            live = jnp.logical_and(active, jnp.isfinite(rr))
+            return jnp.logical_and(jnp.any(live), k < max_iters)
         return jnp.logical_and(jnp.any(active), k < max_iters)
 
     def body(state):
-        x, r, p, rr, active, iters, k = state
+        x, r, p, rr, active, iters, div, best, since, restarts, k = state
         ap = op(p)
         pap = _bvdot(p, ap).real
         # Breakdown guard: a (numerically) nullspace search direction
@@ -241,31 +362,79 @@ def cg_batched(op: Callable, b, x0=None, *, tol: float = 1e-6,
         ok = jnp.logical_and(active, pap > tiny)
         af = ok.astype(rr.dtype)
         alpha = af * rr / _nz(pap, tiny)
-        x = _baxpy(alpha, p, x)
-        r = _baxpy(-alpha, ap, r)
+        x1 = _baxpy(alpha, p, x)
+        r1 = _baxpy(-alpha, ap, r)
         if recompute_every:
-            r = jax.lax.cond(
+            r1 = jax.lax.cond(
                 (k + 1) % recompute_every == 0,
                 lambda xk: _axpy(-1.0, op(xk), b),
-                lambda _: r, x)
-        rr_new = _bnorm2(r)
-        beta = af * rr_new / _nz(rr, tiny)
-        p = _baxpy(beta, p, r)
-        active_new = jnp.logical_and(ok, rr_new > tol2)
+                lambda _: r1, x1)
+        rr1 = _bnorm2(r1)
+        beta = af * rr1 / _nz(rr, tiny)
+        p1 = _baxpy(beta, p, r1)
+        if guard:
+            # Per-column freeze: only active columns whose new residual
+            # stayed finite accept the update (where-select, so a NaN
+            # column cannot leak through the zeroed-alpha arithmetic).
+            finite = jnp.isfinite(rr1)
+            accept = jnp.logical_and(active, finite)
+            x1 = _bwhere(accept, x1, x)
+            r1 = _bwhere(accept, r1, r)
+            p1 = _bwhere(accept, p1, p)
+            rr1 = jnp.where(accept, rr1, rr)
+            newly_bad = jnp.logical_and(active, jnp.logical_not(finite))
+            div = jnp.logical_or(div, newly_bad)
+            # Per-column stagnation -> deterministic restart.
+            improved = rr1 < best
+            best = jnp.where(accept, jnp.minimum(best, rr1), best)
+            since = jnp.where(
+                accept, jnp.where(improved, 0, since + 1), since)
+            stag = jnp.logical_and(accept, since >= stagnation_window)
+            restart = jnp.logical_and(stag, restarts < max_restarts)
+            exhausted = jnp.logical_and(stag, jnp.logical_not(restart))
+
+            def reseed(args):
+                xk, r_, p_, rr_ = args
+                rt = _axpy(-1.0, op(xk), b)
+                rt2 = _bnorm2(rt)
+                return (_bwhere(restart, rt, r_),
+                        _bwhere(restart, rt, p_),
+                        jnp.where(restart, rt2, rr_))
+
+            r1, p1, rr1 = jax.lax.cond(
+                jnp.any(restart), reseed,
+                lambda a: (a[1], a[2], a[3]), (x1, r1, p1, rr1))
+            best = jnp.where(restart, rr1, best)
+            since = jnp.where(restart, 0, since)
+            restarts = restarts + restart.astype(jnp.int32)
+            div = jnp.logical_or(div, exhausted)
+            active_new = jnp.logical_and(
+                jnp.logical_or(ok, restart), rr1 > tol2)
+            active_new = jnp.logical_and(
+                active_new, jnp.logical_not(div))
+        else:
+            active_new = jnp.logical_and(ok, rr1 > tol2)
         leaving = jnp.logical_and(active, jnp.logical_not(active_new))
         iters = jnp.where(leaving, k + 1, iters)
-        return x, r, p, rr_new, active_new, iters, k + 1
+        return (x1, r1, p1, rr1, active_new, iters, div, best, since,
+                restarts, k + 1)
 
-    state = (x, r, p, rr, active, iters, jnp.int32(0))
-    x, r, p, rr, active, iters, k = jax.lax.while_loop(cond, body, state)
+    state = (x, r, p, rr, active, iters, div, rr,
+             jnp.zeros(rr.shape, jnp.int32),
+             jnp.zeros(rr.shape, jnp.int32), jnp.int32(0))
+    out = jax.lax.while_loop(cond, body, state)
+    x, rr, active, iters, div, k = (out[0], out[3], out[4], out[5],
+                                    out[6], out[10])
     iters = jnp.where(active, k, iters)      # unconverged: ran to the end
     rel = jnp.sqrt(rr / jnp.maximum(b2, 1e-30))
-    return SolveResult(x, iters, rel, rel <= tol)
+    return _result(x, iters, rel, rel <= tol, div)
 
 
 def cgnr(op: Callable, op_dag: Callable, b, x0=None, *,
          tol: float = 1e-6, max_iters: int = 1000,
-         recompute_every: int = 0) -> SolveResult:
+         recompute_every: int = 0, guard: bool = True,
+         stagnation_window: int = STAGNATION_WINDOW,
+         max_restarts: int = MAX_RESTARTS) -> SolveResult:
     """CG on the normal equations ``op^dag op x = op^dag b``."""
     bn = op_dag(b)
 
@@ -273,16 +442,22 @@ def cgnr(op: Callable, op_dag: Callable, b, x0=None, *,
         return op_dag(op(v))
 
     res = cg(normal, bn, x0, tol=tol, max_iters=max_iters,
-             recompute_every=recompute_every)
-    # Report the true residual of the original system.
+             recompute_every=recompute_every, guard=guard,
+             stagnation_window=stagnation_window,
+             max_restarts=max_restarts)
+    # Report the true residual of the original system; the inner CG's
+    # divergence verdict carries over.
     r = _axpy(-1.0, op(res.x), b)
     rel = jnp.sqrt(_norm2(r) / jnp.maximum(_norm2(b), 1e-30))
-    return SolveResult(res.x, res.iterations, rel, rel <= tol * 10)
+    return _result(res.x, res.iterations, rel, rel <= tol * 10,
+                   res.diverged)
 
 
 def cgnr_batched(op: Callable, op_dag: Callable, b, x0=None, *,
                  tol: float = 1e-6, max_iters: int = 1000,
-                 recompute_every: int = 0) -> SolveResult:
+                 recompute_every: int = 0, guard: bool = True,
+                 stagnation_window: int = STAGNATION_WINDOW,
+                 max_restarts: int = MAX_RESTARTS) -> SolveResult:
     """Batched CGNR; per-column true residuals of the original system."""
     bn = op_dag(b)
 
@@ -290,14 +465,20 @@ def cgnr_batched(op: Callable, op_dag: Callable, b, x0=None, *,
         return op_dag(op(v))
 
     res = cg_batched(normal, bn, x0, tol=tol, max_iters=max_iters,
-                     recompute_every=recompute_every)
+                     recompute_every=recompute_every, guard=guard,
+                     stagnation_window=stagnation_window,
+                     max_restarts=max_restarts)
     r = _axpy(-1.0, op(res.x), b)
     rel = jnp.sqrt(_bnorm2(r) / jnp.maximum(_bnorm2(b), 1e-30))
-    return SolveResult(res.x, res.iterations, rel, rel <= tol * 10)
+    return _result(res.x, res.iterations, rel, rel <= tol * 10,
+                   res.diverged)
 
 
 def bicgstab(op: Callable, b, x0=None, *, tol: float = 1e-6,
-             max_iters: int = 1000, recompute_every: int = 0) -> SolveResult:
+             max_iters: int = 1000, recompute_every: int = 0,
+             guard: bool = True,
+             stagnation_window: int = STAGNATION_WINDOW,
+             max_restarts: int = MAX_RESTARTS) -> SolveResult:
     """BiCGStab for general (non-Hermitian) ``op``.
 
     Works on any pytree vector domain: the Krylov scalars take the dtype
@@ -313,86 +494,156 @@ def bicgstab(op: Callable, b, x0=None, *, tol: float = 1e-6,
     are zeroed (state freezes at the last good iterate), the loop exits,
     and the result honestly reports the frozen residual with
     ``converged=False`` instead of NaN.
+
+    The divergence guard (``guard``, default on) adds the non-finite
+    cond check + bit-exact freeze, and a stagnation restart that
+    re-seeds the *whole* Krylov space — shadow residual ``r0``, zeroed
+    ``p``/``v``, unit scalars — from the current iterate's true
+    residual.
     """
     x = x0 if x0 is not None else _scale(0.0, b)
     r = _axpy(-1.0, op(x), b)
-    r0 = r
     one = jnp.ones((), dtype=_vdot(b, b).dtype)
     tiny = _tiny(one.dtype)
-    rho = alpha = omega = one
-    v = p = _scale(0.0, b)
     b2 = _norm2(b)
+    rr0 = _norm2(r)
     tol2 = (tol * tol) * b2
+    zero_v = _scale(0.0, b)
 
     def cond(state):
-        _, r, *_, good, k = state
-        return jnp.logical_and(
-            jnp.logical_and(_norm2(r) > tol2, k < max_iters), good)
+        (x, r, r0, p, v, rho, alpha, omega, rr, good, div, best,
+         since, restarts, k) = state
+        go = jnp.logical_and(
+            jnp.logical_and(rr > tol2, k < max_iters), good)
+        if guard:
+            go = jnp.logical_and(go, jnp.logical_and(
+                jnp.isfinite(rr), jnp.logical_not(div)))
+        return go
 
     def body(state):
-        x, r, p, v, rho, alpha, omega, good, k = state
+        (x, r, r0, p, v, rho, alpha, omega, rr, good, div, best,
+         since, restarts, k) = state
         rho_new = _vdot(r0, r)
         ok = jnp.logical_and(jnp.abs(rho_new) > tiny,
                              jnp.logical_and(jnp.abs(rho) > tiny,
                                              jnp.abs(omega) > tiny))
         okc = ok.astype(rho_new.dtype)
         beta = okc * (rho_new / _nz(rho, tiny)) * (alpha / _nz(omega, tiny))
-        p = _axpy(beta, _axpy(-omega, v, p), r)
-        v = op(p)
-        r0v = _vdot(r0, v)
+        p1 = _axpy(beta, _axpy(-omega, v, p), r)
+        v1 = op(p1)
+        r0v = _vdot(r0, v1)
         ok = jnp.logical_and(ok, jnp.abs(r0v) > tiny)
         okc = ok.astype(rho_new.dtype)
-        alpha_new = okc * rho_new / _nz(r0v, tiny)
-        s = _axpy(-alpha_new, v, r)
+        alpha1 = okc * rho_new / _nz(r0v, tiny)
+        s = _axpy(-alpha1, v1, r)
         t = op(s)
         tt = _vdot(t, t).real
         ok = jnp.logical_and(ok, tt > tiny)
         okc = ok.astype(rho_new.dtype)
-        omega_new = okc * _vdot(t, s) / _nz(tt, tiny).astype(rho_new.dtype)
-        x = _axpy(alpha_new, p, _axpy(omega_new, s, x))
-        r = _axpy(-omega_new, t, s)
+        omega1 = okc * _vdot(t, s) / _nz(tt, tiny).astype(rho_new.dtype)
+        x1 = _axpy(alpha1, p1, _axpy(omega1, s, x))
+        r1 = _axpy(-omega1, t, s)
         if recompute_every:
-            r = jax.lax.cond(
+            r1 = jax.lax.cond(
                 (k + 1) % recompute_every == 0,
                 lambda xk: _axpy(-1.0, op(xk), b),
-                lambda _: r, x)
-        return x, r, p, v, rho_new, alpha_new, omega_new, ok, k + 1
+                lambda _: r1, x1)
+        rr1 = _norm2(r1)
+        if not guard:
+            return (x1, r1, r0, p1, v1, rho_new, alpha1, omega1, rr1,
+                    ok, div, best, since, restarts, k + 1)
+        # Non-finite freeze at the last finite iterate (bit-exact).
+        finite = jnp.isfinite(rr1)
+        x1 = _swhere(finite, x1, x)
+        r1 = _swhere(finite, r1, r)
+        p1 = _swhere(finite, p1, p)
+        v1 = _swhere(finite, v1, v)
+        rho1 = jnp.where(finite, rho_new, rho)
+        alpha1 = jnp.where(finite, alpha1, alpha)
+        omega1 = jnp.where(finite, omega1, omega)
+        rr1 = jnp.where(finite, rr1, rr)
+        div = jnp.logical_or(div, jnp.logical_not(finite))
+        # Stagnation -> restart: fresh shadow residual, zeroed search
+        # space, unit scalars, all seeded from the true residual.
+        improved = rr1 < best
+        best = jnp.minimum(best, rr1)
+        since = jnp.where(improved, 0, since + 1)
+        stag = jnp.logical_and(finite, since >= stagnation_window)
+        restart = jnp.logical_and(stag, restarts < max_restarts)
 
-    state = (x, r, p, v, rho, alpha, omega, jnp.bool_(True), jnp.int32(0))
-    x, r, *_, k = jax.lax.while_loop(cond, body, state)
-    rel = jnp.sqrt(_norm2(r) / jnp.maximum(b2, 1e-30))
-    return SolveResult(x, k, rel, rel <= tol)
+        def reseed(xk):
+            rt = _axpy(-1.0, op(xk), b)
+            return rt, _norm2(rt)
+
+        r1, rr1 = jax.lax.cond(restart, reseed,
+                               lambda _: (r1, rr1), x1)
+        r0 = _swhere(restart, r1, r0)
+        p1 = _swhere(restart, zero_v, p1)
+        v1 = _swhere(restart, zero_v, v1)
+        rho1 = jnp.where(restart, one, rho1)
+        alpha1 = jnp.where(restart, one, alpha1)
+        omega1 = jnp.where(restart, one, omega1)
+        best = jnp.where(restart, rr1, best)
+        since = jnp.where(restart, 0, since)
+        restarts = restarts + restart.astype(jnp.int32)
+        div = jnp.logical_or(div, jnp.logical_and(
+            stag, jnp.logical_not(restart)))
+        # A restart also clears a same-iteration breakdown: the frozen
+        # scalars were just re-seeded.
+        good = jnp.logical_or(ok, restart)
+        return (x1, r1, r0, p1, v1, rho1, alpha1, omega1, rr1, good,
+                div, best, since, restarts, k + 1)
+
+    state = (x, r, r, zero_v, zero_v, one, one, one, rr0,
+             jnp.bool_(True), jnp.bool_(False), rr0, jnp.int32(0),
+             jnp.int32(0), jnp.int32(0))
+    out = jax.lax.while_loop(cond, body, state)
+    x, rr, div, k = out[0], out[8], out[10], out[14]
+    rel = jnp.sqrt(rr / jnp.maximum(b2, 1e-30))
+    return _result(x, k, rel, rel <= tol, div)
 
 
 def bicgstab_batched(op: Callable, b, x0=None, *, tol: float = 1e-6,
-                     max_iters: int = 1000,
-                     recompute_every: int = 0) -> SolveResult:
+                     max_iters: int = 1000, recompute_every: int = 0,
+                     guard: bool = True,
+                     stagnation_window: int = STAGNATION_WINDOW,
+                     max_restarts: int = MAX_RESTARTS) -> SolveResult:
     """Batched BiCGStab with per-column convergence AND breakdown masks.
 
     Converged columns freeze (scalars zeroed, iterate kept bit-exact);
     broken-down columns freeze the same way but stay unconverged —
     ``converged[j] = False`` for them instead of a NaN-poisoned batch.
+    The divergence guard (default on) where-freezes non-finite columns
+    bit-exactly, restarts stagnating columns from their true residual,
+    and reports both through the per-column ``diverged`` mask; healthy
+    columns are bit-for-bit independent of poisoned ones (every Krylov
+    scalar is per-column and the operator acts column-wise).
     """
     x = x0 if x0 is not None else _scale(0.0, b)
     r = b if x0 is None else _axpy(-1.0, op(x), b)
-    r0 = r
     sdtype = _bvdot(b, b).dtype
     tiny = _tiny(sdtype)
     n = jax.tree_util.tree_leaves(b)[0].shape[0]
     one = jnp.ones((n,), dtype=sdtype)
-    rho = alpha = omega = one
-    v = p = _scale(0.0, b)
+    zero_v = _scale(0.0, b)
     b2 = _bnorm2(b)
     tol2 = (tol * tol) * b2
-    active = _bnorm2(r) > tol2
+    rr0 = _bnorm2(r)
+    active = rr0 > tol2
     iters = jnp.zeros((n,), jnp.int32)
+    div = jnp.logical_not(jnp.isfinite(rr0)) if guard \
+        else jnp.zeros((n,), bool)
 
     def cond(state):
-        *_, active, _, k = state
+        rr, active, k = state[8], state[9], state[15]
+        if guard:
+            live = jnp.logical_and(active, jnp.isfinite(rr))
+            return jnp.logical_and(jnp.any(live), k < max_iters)
         return jnp.logical_and(jnp.any(active), k < max_iters)
 
     def body(state):
-        x, r, p, v, rho, alpha, omega, active, iters, k = state
+        (x, r, r0, p, v, rho, alpha, omega, rr, active, iters, div,
+         best, since, restarts, k) = state
         rho_new = _bvdot(r0, r)
         ok = jnp.logical_and(
             active,
@@ -403,41 +654,94 @@ def bicgstab_batched(op: Callable, b, x0=None, *, tol: float = 1e-6,
         beta = okc * (rho_new / _nz(rho, tiny)) * (alpha / _nz(omega, tiny))
         # Frozen columns get beta = 0 -> p := r (harmless: their alpha /
         # omega below are 0, so x and r never move again).
-        p = _baxpy(beta, _baxpy(-omega * okc, v, p), r)
-        v = op(p)
-        r0v = _bvdot(r0, v)
+        p1 = _baxpy(beta, _baxpy(-omega * okc, v, p), r)
+        v1 = op(p1)
+        r0v = _bvdot(r0, v1)
         ok = jnp.logical_and(ok, jnp.abs(r0v) > tiny)
         okc = ok.astype(sdtype)
-        alpha_new = okc * rho_new / _nz(r0v, tiny)
-        s = _baxpy(-alpha_new, v, r)
+        alpha1 = okc * rho_new / _nz(r0v, tiny)
+        s = _baxpy(-alpha1, v1, r)
         t = op(s)
         tt = _bvdot(t, t).real
         ok = jnp.logical_and(ok, tt > tiny)
         okc = ok.astype(sdtype)
-        omega_new = okc * _bvdot(t, s) / _nz(tt, tiny).astype(sdtype)
-        x = _baxpy(alpha_new, p, _baxpy(omega_new, s, x))
-        r = _baxpy(-omega_new, t, s)
+        omega1 = okc * _bvdot(t, s) / _nz(tt, tiny).astype(sdtype)
+        x1 = _baxpy(alpha1, p1, _baxpy(omega1, s, x))
+        r1 = _baxpy(-omega1, t, s)
         if recompute_every:
-            r = jax.lax.cond(
+            r1 = jax.lax.cond(
                 (k + 1) % recompute_every == 0,
                 lambda xk: _axpy(-1.0, op(xk), b),
-                lambda _: r, x)
-        rr = _bnorm2(r)
-        # Columns that broke down this iteration (ok went False while
-        # still active and unconverged) freeze too: drop them from the
-        # active set so the loop can terminate for the rest.  Either way
-        # of leaving the active set records the iteration it happened at.
-        active_new = jnp.logical_and(ok, rr > tol2)
+                lambda _: r1, x1)
+        rr1 = _bnorm2(r1)
+        rho1, alpha_o, omega_o = rho_new, alpha1, omega1
+        if guard:
+            # Per-column bit-exact freeze of non-finite columns.
+            finite = jnp.isfinite(rr1)
+            accept = jnp.logical_and(active, finite)
+            x1 = _bwhere(accept, x1, x)
+            r1 = _bwhere(accept, r1, r)
+            p1 = _bwhere(accept, p1, p)
+            v1 = _bwhere(accept, v1, v)
+            rho1 = jnp.where(accept, rho_new, rho)
+            alpha_o = jnp.where(accept, alpha1, alpha)
+            omega_o = jnp.where(accept, omega1, omega)
+            rr1 = jnp.where(accept, rr1, rr)
+            newly_bad = jnp.logical_and(active, jnp.logical_not(finite))
+            div = jnp.logical_or(div, newly_bad)
+            # Per-column stagnation -> full Krylov-space re-seed.
+            improved = rr1 < best
+            best = jnp.where(accept, jnp.minimum(best, rr1), best)
+            since = jnp.where(
+                accept, jnp.where(improved, 0, since + 1), since)
+            stag = jnp.logical_and(accept, since >= stagnation_window)
+            restart = jnp.logical_and(stag, restarts < max_restarts)
+            exhausted = jnp.logical_and(stag, jnp.logical_not(restart))
+
+            def reseed(args):
+                x_, r_, r0_, p_, v_, rr_ = args
+                rt = _axpy(-1.0, op(x_), b)
+                rt2 = _bnorm2(rt)
+                return (_bwhere(restart, rt, r_),
+                        _bwhere(restart, rt, r0_),
+                        _bwhere(restart, zero_v, p_),
+                        _bwhere(restart, zero_v, v_),
+                        jnp.where(restart, rt2, rr_))
+
+            r1, r0, p1, v1, rr1 = jax.lax.cond(
+                jnp.any(restart), reseed,
+                lambda a: (a[1], a[2], a[3], a[4], a[5]),
+                (x1, r1, r0, p1, v1, rr1))
+            rho1 = jnp.where(restart, one, rho1)
+            alpha_o = jnp.where(restart, one, alpha_o)
+            omega_o = jnp.where(restart, one, omega_o)
+            best = jnp.where(restart, rr1, best)
+            since = jnp.where(restart, 0, since)
+            restarts = restarts + restart.astype(jnp.int32)
+            div = jnp.logical_or(div, exhausted)
+            active_new = jnp.logical_and(
+                jnp.logical_or(ok, restart), rr1 > tol2)
+            active_new = jnp.logical_and(
+                active_new, jnp.logical_not(div))
+        else:
+            # Columns that broke down this iteration (ok went False
+            # while still active and unconverged) freeze too: drop them
+            # from the active set so the loop can terminate.
+            active_new = jnp.logical_and(ok, rr1 > tol2)
         leaving = jnp.logical_and(active, jnp.logical_not(active_new))
         iters = jnp.where(leaving, k + 1, iters)
-        return (x, r, p, v, rho_new, alpha_new, omega_new, active_new,
-                iters, k + 1)
+        return (x1, r1, r0, p1, v1, rho1, alpha_o, omega_o, rr1,
+                active_new, iters, div, best, since, restarts, k + 1)
 
-    state = (x, r, p, v, rho, alpha, omega, active, iters, jnp.int32(0))
-    x, r, *_, active, iters, k = jax.lax.while_loop(cond, body, state)
+    state = (x, r, r, zero_v, zero_v, one, one, one, rr0, active,
+             iters, div, rr0, jnp.zeros((n,), jnp.int32),
+             jnp.zeros((n,), jnp.int32), jnp.int32(0))
+    out = jax.lax.while_loop(cond, body, state)
+    x, rr, active, iters, div, k = (out[0], out[8], out[9], out[10],
+                                    out[11], out[15])
     iters = jnp.where(active, k, iters)
-    rel = jnp.sqrt(_bnorm2(r) / jnp.maximum(b2, 1e-30))
-    return SolveResult(x, iters, rel, rel <= tol)
+    rel = jnp.sqrt(rr / jnp.maximum(b2, 1e-30))
+    return _result(x, iters, rel, rel <= tol, div)
 
 
 # Krylov methods valid on the (non-Hermitian) even-odd Schur system.
@@ -451,23 +755,27 @@ KRYLOV_METHODS = ("cg", "cgnr", "bicgstab")
 
 
 def _run_krylov(method: str, dhat, dhat_dag, rhs, *, tol, max_iters,
-                recompute_every, batched: bool = False):
+                recompute_every, batched: bool = False,
+                guard: bool = True,
+                stagnation_window: int = STAGNATION_WINDOW,
+                max_restarts: int = MAX_RESTARTS):
+    kw = dict(tol=tol, max_iters=max_iters,
+              recompute_every=recompute_every, guard=guard,
+              stagnation_window=stagnation_window,
+              max_restarts=max_restarts)
     if method == "cg":
         fn = cg_batched if batched else cg
 
         def normal(v):
             return dhat_dag(dhat(v))
 
-        return fn(normal, dhat_dag(rhs), tol=tol, max_iters=max_iters,
-                  recompute_every=recompute_every)
+        return fn(normal, dhat_dag(rhs), **kw)
     if method == "cgnr":
         fn = cgnr_batched if batched else cgnr
-        return fn(dhat, dhat_dag, rhs, tol=tol, max_iters=max_iters,
-                  recompute_every=recompute_every)
+        return fn(dhat, dhat_dag, rhs, **kw)
     if method == "bicgstab":
         fn = bicgstab_batched if batched else bicgstab
-        return fn(dhat, rhs, tol=tol, max_iters=max_iters,
-                  recompute_every=recompute_every)
+        return fn(dhat, rhs, **kw)
     raise ValueError(
         f"unknown method {method!r}; choose from {KRYLOV_METHODS}")
 
@@ -475,7 +783,16 @@ def _run_krylov(method: str, dhat, dhat_dag, rhs, *, tol, max_iters,
 _INNER_DTYPES = {
     "f32": jnp.float32, "float32": jnp.float32,
     "bf16": jnp.bfloat16, "bfloat16": jnp.bfloat16,
+    # top rung of the escalation ladder (inner solve at full precision;
+    # only useful when the outer loop escalated its way up there, or
+    # for A/B-ing refinement overhead against a pure-f64 solve)
+    "f64": jnp.float64, "float64": jnp.float64,
 }
+
+# Precision-escalation ladder (cheap -> exact): when a refined solve's
+# outer residual stops contracting, make_refined_solve climbs one rung
+# and rebuilds the inner operator there (see ``bops_factory``).
+ESCALATION_LADDER = ("bf16", "f32", "f64")
 
 
 def resolve_inner_dtype(inner_dtype):
@@ -493,7 +810,10 @@ def resolve_inner_dtype(inner_dtype):
 
 def make_native_solve(bops, kappa, *, method: str = "cgnr",
                       tol: float = 1e-6, max_iters: int = 2000,
-                      recompute_every: int = 0, batched: bool = False):
+                      recompute_every: int = 0, batched: bool = False,
+                      guard: bool = True,
+                      stagnation_window: int = STAGNATION_WINDOW,
+                      max_restarts: int = MAX_RESTARTS):
     """Build the native-domain Schur-solve pipeline for a bound operator.
 
     Returns ``fn(v_e, v_o) -> (x, v_xi_o, SolveResult)`` working entirely
@@ -522,7 +842,9 @@ def make_native_solve(bops, kappa, *, method: str = "cgnr",
             lambda v: dhat_nat(v, kappa),
             lambda v: dhat_dag_nat(v, kappa),
             rhs, tol=tol, max_iters=max_iters,
-            recompute_every=recompute_every, batched=batched)
+            recompute_every=recompute_every, batched=batched,
+            guard=guard, stagnation_window=stagnation_window,
+            max_restarts=max_restarts)
         # Eq. (5): xi_o = eta_o + kappa * H_oe xi_e.
         v_xi_o = _axpy(kappa, hop_oe_nat(res.x), v_o)
         return res.x, v_xi_o, res
@@ -533,7 +855,13 @@ def make_native_solve(bops, kappa, *, method: str = "cgnr",
 def make_refined_solve(bops, U64_e, U64_o, kappa, *, method: str = "cgnr",
                        tol: float = 1e-10, max_iters: int = 2000,
                        recompute_every: int = 0, inner_tol: float = 1e-4,
-                       max_outer: int = 25, batched: bool = False):
+                       max_outer: int = 25, batched: bool = False,
+                       guard: bool = True,
+                       stagnation_window: int = STAGNATION_WINDOW,
+                       max_restarts: int = MAX_RESTARTS,
+                       inner_dtype="f32", escalate: bool = True,
+                       bops_factory=None, stall_factor: float = 0.9,
+                       snapshot=None):
     """Build a reusable mixed-precision iterative-refinement solve.
 
     ``bops`` is the *inner* backend, already bound at the cheap inner
@@ -553,6 +881,20 @@ def make_refined_solve(bops, U64_e, U64_o, kappa, *, method: str = "cgnr",
     ``tol``.  The f64 operator is applied once per outer pass — versus
     ~2 per Krylov iteration for a pure-f64 solve — and all the
     bandwidth-hungry iterating happens at the inner dtype's traffic.
+
+    **Precision escalation** (``escalate``, on by default, active when a
+    ``bops_factory`` is supplied): when an outer pass fails to contract
+    the residual by ``stall_factor`` — or the inner solve's divergence
+    guard trips — the inner dtype climbs :data:`ESCALATION_LADDER` from
+    its starting rung (``inner_dtype``) and the inner operator is
+    rebuilt via ``bops_factory(rung_name) -> bops``.  Each step taken is
+    recorded in ``RefinedResult.escalations``; at the ``"f64"`` rung the
+    correction residual is handed to the inner solve at complex128.
+
+    ``snapshot`` (a :class:`repro.resilience.RefinementSnapshot`) makes
+    the outer loop resumable: the f64 iterate is checkpointed after
+    every correction, and a later call resumes from the newest one
+    instead of from zero.
     """
     from . import evenodd
 
@@ -575,16 +917,22 @@ def make_refined_solve(bops, U64_e, U64_o, kappa, *, method: str = "cgnr",
     hop_oe64 = jax.jit(_maybe_vmap(
         lambda v: evenodd.hop_oe(U64_e, U64_o, v)))
 
-    if batched:
-        to_dom, from_dom = bops.to_domain_batched, bops.from_domain_batched
-        dhat_nat = bops.apply_dhat_native_batched
-        dhat_dag_nat = bops.apply_dhat_dagger_native_batched
-    else:
-        to_dom, from_dom = bops.to_domain, bops.from_domain
-        dhat_nat = bops.apply_dhat_native
-        dhat_dag_nat = bops.apply_dhat_dagger_native
+    def _inner_ops(bops_):
+        if batched:
+            return (bops_.to_domain_batched, bops_.from_domain_batched,
+                    bops_.apply_dhat_native_batched,
+                    bops_.apply_dhat_dagger_native_batched)
+        return (bops_.to_domain, bops_.from_domain,
+                bops_.apply_dhat_native, bops_.apply_dhat_dagger_native)
 
     bnorm = _bnorm2 if batched else _norm2
+
+    ladder = list(ESCALATION_LADDER)
+    start = inner_dtype if isinstance(inner_dtype, str) else "f32"
+    start = {"float32": "f32", "bfloat16": "bf16",
+             "float64": "f64"}.get(start.lower(), start.lower())
+    start_rung = ladder.index(start) if start in ladder \
+        else ladder.index("f32")
 
     def refined(eta_e, eta_o):
         eta64_e = eta_e.astype(jnp.complex128)
@@ -594,37 +942,83 @@ def make_refined_solve(bops, U64_e, U64_o, kappa, *, method: str = "cgnr",
         b2 = bnorm(rhs64)
 
         x64 = jnp.zeros_like(rhs64)
+        start_outer = 0
+        if snapshot is not None:
+            x64, start_outer, _ = snapshot.resume(x64)
         inner_iters = 0
         # Per-column (batched) / scalar (unbatched) total inner
         # iterations, matching the batched SolveResult contract
         # RefinedResult duck-types.
         iters_acc = jnp.zeros(b2.shape, jnp.int32)
-        outer = 0
+        cur = bops
+        to_dom, from_dom, dhat_nat, dhat_dag_nat = _inner_ops(cur)
+        rung = start_rung
+        escalations = []
+        inner_div = None
+        best_worst = None
+        outer = start_outer
         rel = None
-        for outer in range(1, max_outer + 1):
+        for outer in range(start_outer + 1, max_outer + 1):
             r64 = rhs64 - dhat64(x64)
             f64_applies += 1
             rel = jnp.sqrt(bnorm(r64) / jnp.maximum(b2, 1e-300))
             if bool(jnp.all(rel <= tol)):
                 break
-            # Correction solve in the inner dtype, native domain.
-            v = to_dom(r64.astype(jnp.complex64))
+            # Escalation trigger: the previous pass failed to contract
+            # the worst-column residual by stall_factor, or its inner
+            # solve tripped the divergence guard.
+            worst = float(jnp.max(rel))
+            stalled = (best_worst is not None
+                       and not worst < best_worst * stall_factor)
+            tripped = inner_div is not None and bool(jnp.any(inner_div))
+            if ((stalled or tripped) and escalate
+                    and bops_factory is not None):
+                while rung + 1 < len(ladder):
+                    rung += 1
+                    try:
+                        cur = bops_factory(ladder[rung])
+                    except Exception:       # rung unavailable: keep
+                        continue            # climbing
+                    to_dom, from_dom, dhat_nat, dhat_dag_nat = \
+                        _inner_ops(cur)
+                    escalations.append(ladder[rung])
+                    best_worst = None       # fresh contraction baseline
+                    break
+            if best_worst is None or worst < best_worst:
+                best_worst = worst
+            # Correction solve in the inner dtype, native domain (the
+            # f64 rung keeps the correction residual at complex128).
+            cdt = jnp.complex128 if ladder[rung] == "f64" \
+                else jnp.complex64
+            v = to_dom(r64.astype(cdt))
             res = _run_krylov(
                 method,
                 lambda w: dhat_nat(w, kappa),
                 lambda w: dhat_dag_nat(w, kappa),
                 v, tol=inner_tol, max_iters=max_iters,
-                recompute_every=recompute_every, batched=batched)
+                recompute_every=recompute_every, batched=batched,
+                guard=guard, stagnation_window=stagnation_window,
+                max_restarts=max_restarts)
+            inner_div = res.diverged
             x64 = x64 + from_dom(res.x).astype(jnp.complex128)
             iters_acc = iters_acc + res.iterations.astype(jnp.int32)
             inner_iters += int(jnp.max(res.iterations))
+            if snapshot is not None:
+                snapshot.save(outer, x64)
         else:
             # Outer budget exhausted: report the residual of the final
             # iterate, not the one from before the last correction.
             r64 = rhs64 - dhat64(x64)
             f64_applies += 1
             rel = jnp.sqrt(bnorm(r64) / jnp.maximum(b2, 1e-300))
-        converged = rel <= tol
+        diverged = jnp.logical_not(jnp.isfinite(rel))
+        if inner_div is not None:
+            # An inner guard trip only counts as divergence if the
+            # outer loop never recovered the column to tolerance.
+            diverged = jnp.logical_or(diverged, jnp.logical_and(
+                inner_div, jnp.logical_not(rel <= tol)))
+        converged = jnp.logical_and(rel <= tol,
+                                    jnp.logical_not(diverged))
 
         xi_o64 = eta64_o + kappa * hop_oe64(x64)
         f64_applies += 1
@@ -633,6 +1027,7 @@ def make_refined_solve(bops, U64_e, U64_o, kappa, *, method: str = "cgnr",
         return xi_e, xi_o, RefinedResult(
             x=xi_e, iterations=iters_acc, residual=rel,
             converged=converged, outer_iterations=outer,
-            f64_applies=f64_applies, inner_iterations=inner_iters)
+            f64_applies=f64_applies, inner_iterations=inner_iters,
+            diverged=diverged, escalations=tuple(escalations))
 
     return refined

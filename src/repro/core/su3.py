@@ -102,6 +102,21 @@ def unitarity_defect(U: jnp.ndarray) -> jnp.ndarray:
     return jnp.max(jnp.abs(uud - eye))
 
 
+def project_su3(U: jnp.ndarray) -> jnp.ndarray:
+    """Project ``(..., 3, 3)`` complex matrices onto SU(3).
+
+    The unitary polar factor ``W V^dag`` of the SVD (the nearest unitary
+    in Frobenius norm), with the residual determinant phase divided out
+    — the repair half of a gauge-integrity audit
+    (:func:`repro.resilience.repair_gauge`).  Links must be finite and
+    non-singular; replace corrupted links first.
+    """
+    w, _, vh = jnp.linalg.svd(U)
+    q = jnp.einsum("...ab,...bc->...ac", w, vh)
+    det = jnp.linalg.det(q)
+    return q * (det[..., None, None] ** (-1.0 / 3.0))
+
+
 def plaquette(U: jnp.ndarray) -> jnp.ndarray:
     """Average plaquette ``Re tr P / 3`` over all sites and planes.
 

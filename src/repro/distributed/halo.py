@@ -131,6 +131,30 @@ def assemble_tz(x: jnp.ndarray, slots: HaloSlots,
     return jnp.concatenate([lo_z, ext_t, hi_z], axis=z_axis)
 
 
+def boundary_slab_index(ndim: int, complex_layout: bool, axis: int = 0,
+                        index: int = 0) -> Tuple:
+    """Index tuple selecting one t/z boundary plane of an even-odd
+    spinor field — exactly the slab a halo exchange ships (``axis``
+    0 = t faces, 1 = z faces; only t and z ever cross ranks here).
+
+    Understands both vector layouts, with or without a leading nrhs
+    axis: complex ``(T, Z, Y, Xh, 4, 3)`` and planar-native
+    ``(T, Z, C, Y, Xh)``.  The fault injector
+    (``repro.resilience.corrupt_halo_slab``) uses this to poison
+    precisely the data a corrupted exchange would have delivered.
+    """
+    base = 6 if complex_layout else 5
+    if ndim not in (base, base + 1):
+        raise ValueError(
+            f"unrecognized spinor layout: ndim={ndim} for "
+            f"{'complex' if complex_layout else 'planar'} data")
+    if axis not in (0, 1):
+        raise ValueError("axis must be 0 (t faces) or 1 (z faces)")
+    idx: list = [slice(None)] * ndim
+    idx[(ndim - base) + axis] = index
+    return tuple(idx)
+
+
 def halo_traffic_model(Tl: int, Zl: int, Y: int, Xh: int, *,
                        nrhs: int = 1, itemsize: int = 4,
                        gauge_comps: int = GAUGE_COMPS) -> dict:

@@ -105,6 +105,17 @@ def main(argv=None):
     ap.add_argument("--recompute-every", type=int, default=0,
                     help="recompute the true residual every N Krylov "
                          "iterations (0 = never)")
+    ap.add_argument("--validate", default="none",
+                    choices=["none", "warn", "repair"],
+                    help="SU(3) gauge-integrity audit at bind: 'warn' "
+                         "reports unitarity/finiteness defects, "
+                         "'repair' projects defective links back onto "
+                         "the group before any codec packs them")
+    ap.add_argument("--fallback", action="store_true",
+                    help="graceful degradation: on a backend failure "
+                         "(bind or solve time) walk the declared "
+                         "fallback chain toward the jnp reference "
+                         "instead of aborting the campaign")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--restart-every", type=int, default=0,
                     help="simulate failure/restart every N solves")
@@ -158,9 +169,17 @@ def main(argv=None):
     # Bind once: layout conversion, placement, and policy selection
     # happen HERE; the session below then reuses one compiled solve for
     # the whole batch of same-shape solves.
-    matrix = api.WilsonMatrix.bind(Ue, Uo, args.kappa, backend=bspec)
+    matrix = api.WilsonMatrix.bind(Ue, Uo, args.kappa, backend=bspec,
+                                   validate=args.validate,
+                                   fallback=args.fallback)
     session = api.SolveSession(matrix, sspec)
-    print(f"backend {bspec.name} (native domain: {matrix.ops.domain})")
+    print(f"backend {matrix.backend.name} "
+          f"(native domain: {matrix.ops.domain})")
+    if args.validate != "none":
+        print(f"gauge audit: {matrix.gauge_audit}")
+    if matrix.degraded:
+        print(f"DEGRADED: requested {matrix.requested_backend}, running "
+              f"{matrix.backend.name}; events={matrix.fallback_events}")
 
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
     nrhs = args.nrhs
@@ -218,7 +237,8 @@ def main(argv=None):
               f"first={row['first_solve_s']:.3f}s steady={steady}")
     print(f"session: solves={st['solves']} traces={st['traces']} "
           f"cache_hits={st['cache_hits']} "
-          f"cache_misses={st['cache_misses']}")
+          f"cache_misses={st['cache_misses']} "
+          f"fallbacks={st['fallbacks']} degraded={st['degraded']}")
     print("done")
 
 

@@ -1,0 +1,59 @@
+"""Resilient solve runtime: fault injection, guards, and recovery.
+
+Long campaign solves (propagator batches, HMC trajectories) die in
+four characteristic ways, and this package owns the recovery path for
+each:
+
+* **numerical divergence** — a Krylov state goes non-finite or stops
+  contracting.  The in-loop guards live in :mod:`repro.core.solver`
+  (``guard=True``, reported via ``SolveResult.diverged``); this package
+  provides the injectors that prove they trip.
+* **precision stall** — an inner bf16/f32 refinement solve cannot reach
+  the correction tolerance.  ``make_refined_solve`` escalates the inner
+  dtype up :data:`repro.core.solver.ESCALATION_LADDER`.
+* **corrupted data** — a gauge field damaged in memory or transit.
+  :func:`audit_gauge` / :func:`repair_gauge` (SU(3) unitarity audit +
+  polar-projection repair) back ``WilsonMatrix.bind(validate=...)``.
+* **broken backend** — kernel compilation or a VMEM policy raises.
+  :func:`fallback_chain` walks the registry's declared
+  ``BackendCapabilities.fallback`` links; ``WilsonMatrix`` /
+  ``SolveSession`` rebind down the chain and report ``degraded``.
+
+:class:`RefinementSnapshot` additionally makes the outer refinement
+loop resumable across process death (atomic checkpoints via
+:mod:`repro.checkpoint`).
+
+All injectors in :mod:`repro.resilience.inject` are seeded and
+deterministic — the chaos suite (``tests/test_resilience.py``) is
+reproducible run to run.
+"""
+from .fallback import adapt_spec, fallback_chain
+from .inject import (
+    InjectedFault,
+    bitflip_gauge,
+    break_ops,
+    corrupt_halo_slab,
+    dead_inner_ops,
+    nan_operator,
+    nan_spinor_column,
+    stagnating_system,
+)
+from .snapshot import RefinementSnapshot
+from .validate import GaugeAuditReport, audit_gauge, repair_gauge
+
+__all__ = [
+    "GaugeAuditReport",
+    "InjectedFault",
+    "RefinementSnapshot",
+    "adapt_spec",
+    "audit_gauge",
+    "bitflip_gauge",
+    "break_ops",
+    "corrupt_halo_slab",
+    "dead_inner_ops",
+    "fallback_chain",
+    "nan_operator",
+    "nan_spinor_column",
+    "repair_gauge",
+    "stagnating_system",
+]

@@ -1,0 +1,58 @@
+"""Backend fallback chains (graceful degradation).
+
+Each backend *declares* its own next-best substitute via
+``BackendCapabilities.fallback`` at registration time — the chain is
+data in the registry, not policy hardcoded in the session.  The shipped
+order degrades capability monotonically toward the always-available
+reference::
+
+    pallas_fused_stream -> pallas_fused -> pallas -> jnp
+    distributed         -> jnp
+
+A backend author adding a new kernel opts into degradation by naming
+its fallback in ``register_backend(capabilities=...)``; ``None`` ends
+the chain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro import backends
+
+
+def fallback_chain(name: str) -> Tuple[str, ...]:
+    """Ordered backend names starting at ``name``, following declared
+    ``BackendCapabilities.fallback`` links until a backend with no
+    fallback.  Cycle-safe (a repeated name ends the walk); unknown
+    links raise at walk time rather than at solve time."""
+    chain = [name]
+    seen = {name}
+    while True:
+        nxt = backends.backend_info(chain[-1]).fallback
+        if not nxt or nxt in seen:
+            return tuple(chain)
+        backends.backend_info(nxt)     # unregistered link: raise here
+        chain.append(nxt)
+        seen.add(nxt)
+
+
+def adapt_spec(spec, name: str):
+    """Re-target a ``BackendSpec`` at backend ``name`` for a fallback
+    rebind, dropping every knob the target's capabilities cannot honor:
+    an unsupported ``dtype`` or ``interpret`` reverts to the backend
+    default, an unsupported ``gauge_compression`` to ``"none"``, and
+    backend-specific ``opts`` are cleared when the backend changes
+    (they were named for the failed backend's factory)."""
+    caps = backends.backend_info(name)
+    changes: dict = {"name": name}
+    if spec.dtype is not None and spec.dtype not in caps.dtypes:
+        changes["dtype"] = None
+    if spec.interpret is not None and not caps.supports_interpret:
+        changes["interpret"] = None
+    if (spec.gauge_compression != "none"
+            and spec.gauge_compression not in caps.gauge_compressions):
+        changes["gauge_compression"] = "none"
+    if name != spec.name and spec.opts:
+        changes["opts"] = ()
+    return dataclasses.replace(spec, **changes)

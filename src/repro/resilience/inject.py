@@ -1,0 +1,160 @@
+"""Seeded, deterministic fault injectors for the chaos suite.
+
+Every injector is pure: it returns a corrupted *copy* (or a wrapped
+operator) and never mutates its input, so an injected run and its
+clean control can share the same source arrays.  Injection points
+mirror the real failure modes of a campaign solve:
+
+* :func:`nan_spinor_column` — a NaN landing in one RHS column of a
+  multi-RHS block (bad I/O, bad source construction).
+* :func:`nan_operator` — the operator itself starts emitting a
+  non-finite lane (SDC in the stencil datapath); trips the guard
+  mid-iteration rather than at entry.
+* :func:`bitflip_gauge` — one flipped bit in one real component of one
+  gauge link: the classic silent memory corruption the gauge audit
+  (``WilsonMatrix.bind(validate=...)``) exists for.
+* :func:`corrupt_halo_slab` — a t/z boundary plane full of NaNs, the
+  footprint of a torn halo exchange on the distributed backend.
+* :func:`dead_inner_ops` — the inner refinement operator returns zero
+  corrections: forced stagnation, driving the precision-escalation
+  ladder.
+* :func:`break_ops` — native operator entry points that raise
+  :class:`InjectedFault` at trace time: a deterministic stand-in for
+  kernel-compilation / VMEM-policy failure (on CPU CI the Pallas
+  interpreter deliberately skips the real VMEM raises, so the fallback
+  chain needs a synthetic trigger).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.halo import boundary_slab_index
+
+
+class InjectedFault(RuntimeError):
+    """Raised by :func:`break_ops`-wrapped entry points at trace time."""
+
+
+def nan_spinor_column(eta, column: int, *, site=(0, 0, 0, 0)):
+    """NaN one site of RHS column ``column`` of a batched complex
+    source block ``(nrhs, T, Z, Y, Xh, 4, 3)``.
+
+    One poisoned value is enough: the first operator application
+    spreads it through the column, and per-column Krylov scalars keep
+    it *out* of every other column — which is exactly what the chaos
+    suite asserts (healthy columns bit-exact with the clean run).
+    """
+    bad = jnp.asarray(complex(float("nan"), 0.0), eta.dtype)
+    return eta.at[(column, *site, 0, 0)].set(bad)
+
+
+def nan_operator(op, *, lane: int = 0):
+    """Wrap a linear-operator callable so every application with a live
+    input emits a NaN in one flat lane of its first output leaf.
+
+    The corruption is gated on the lane being nonzero, so the entry
+    residual ``b - op(0)`` stays healthy and the divergence appears
+    mid-iteration — the guard's freeze path, not the entry exit —
+    which also keeps the wrapper `while_loop`-traceable (no Python
+    call counter)."""
+
+    def bad_op(v, *args):
+        out = op(v, *args)
+        leaves, treedef = jax.tree_util.tree_flatten(out)
+        flat = leaves[0].reshape(-1)
+        nan = jnp.asarray(float("nan"), flat.dtype)
+        flat = flat.at[lane].set(
+            jnp.where(jnp.abs(flat[lane]) > 0, nan, flat[lane]))
+        leaves = [flat.reshape(leaves[0].shape)] + leaves[1:]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    return bad_op
+
+
+_FLOAT_VIEW = {
+    np.dtype(np.complex64): np.float32,
+    np.dtype(np.complex128): np.float64,
+    np.dtype(np.float32): np.float32,
+    np.dtype(np.float64): np.float64,
+}
+
+
+def bitflip_gauge(U, *, seed: int = 0, bit: int | None = None):
+    """Flip one bit of one real component of one gauge link.
+
+    Seeded and deterministic (numpy bit-view on a host copy).  The
+    default bit is a high exponent bit — the flip that turns a unit
+    link entry into ~1e18 and makes the unitarity defect unmissable;
+    pass a mantissa bit to model subtler corruption.
+    """
+    a = np.array(np.asarray(U), copy=True)
+    f = a.view(_FLOAT_VIEW[a.dtype]).reshape(-1)
+    u = f.view(np.uint64 if f.dtype == np.float64 else np.uint32)
+    if bit is None:
+        bit = 62 if u.dtype == np.uint64 else 30
+    k = int(np.random.default_rng(seed).integers(u.size))
+    u[k] ^= u.dtype.type(1) << u.dtype.type(bit)
+    return jnp.asarray(a)
+
+
+def corrupt_halo_slab(v, *, axis: int = 0, index: int = 0):
+    """NaN one t/z boundary plane of a spinor field — the slab a halo
+    exchange ships (complex or planar-native layout, batched or not;
+    see :func:`repro.distributed.halo.boundary_slab_index`)."""
+    idx = boundary_slab_index(v.ndim, bool(jnp.iscomplexobj(v)),
+                              axis=axis, index=index)
+    return v.at[idx].set(jnp.asarray(float("nan"), v.dtype))
+
+
+def _replace_native(bops, fn):
+    return dataclasses.replace(
+        bops,
+        apply_dhat_native=fn,
+        apply_dhat_dagger_native=fn,
+        apply_dhat_native_batched=fn,
+        apply_dhat_dagger_native_batched=fn,
+    )
+
+
+def dead_inner_ops(bops):
+    """A copy of ``bops`` whose native Dhat (and dagger) is the ZERO
+    operator: every correction solve returns a zero update, so an
+    outer refinement loop driven by it stalls deterministically — the
+    forced-stagnation injector behind the escalation chaos tests."""
+
+    def zero(v, kappa):
+        del kappa
+        return jax.tree_util.tree_map(jnp.zeros_like, v)
+
+    return _replace_native(bops, zero)
+
+
+def break_ops(bops, message: str = "injected compile failure"):
+    """A copy of ``bops`` whose native entry points raise
+    :class:`InjectedFault` the moment anything traces through them —
+    the forced backend-compilation failure behind the fallback-chain
+    chaos tests."""
+
+    def boom(v, kappa):
+        raise InjectedFault(message)
+
+    return _replace_native(bops, boom)
+
+
+def stagnating_system(n: int = 48, *, cond: float = 1e8, seed: int = 0,
+                      dtype=jnp.float32):
+    """A dense SPD system ``(A, b)`` whose f32 CG stalls far above
+    tight tolerances: eigenvalues log-spaced across ``cond`` put the
+    attainable relative residual orders of magnitude above ``tol``
+    values like 1e-12, so the stagnation guard — not ``max_iters`` —
+    is what ends the solve."""
+    key = jax.random.PRNGKey(seed)
+    q, _ = jnp.linalg.qr(jax.random.normal(key, (n, n), dtype=dtype))
+    ev = jnp.logspace(0.0, float(np.log10(cond)), n).astype(dtype)
+    A = (q * ev) @ q.T
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n,), dtype=dtype)
+    return A, b

@@ -1,0 +1,48 @@
+"""Snapshot/resume for the outer refinement loop.
+
+The mixed-precision outer loop is the one Python-level, long-running
+piece of a solve — the natural checkpoint boundary.  Everything else
+(the inner Krylov ``while_loop``) is cheap to redo from the restored
+f64 iterate, so the snapshot is just ``{"x64": iterate}`` plus the
+outer pass number.
+
+Thin harness over :class:`repro.checkpoint.ckpt.Checkpointer` (atomic
+staged saves, LATEST pointer, keep-last-k GC) — synchronous saves, so a
+snapshot on disk is always complete when :meth:`save` returns.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.checkpoint.ckpt import Checkpointer
+
+
+class RefinementSnapshot:
+    """Checkpoint the f64 outer iterate of a refined solve.
+
+    Pass one to :func:`repro.core.solver.make_refined_solve` via
+    ``snapshot=``: the iterate is saved after every outer correction,
+    and the next call against the same directory resumes from the
+    newest snapshot instead of from zero (fewer f64 applies, same
+    converged answer — the chaos suite asserts both).
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.ckpt = Checkpointer(directory, keep=keep, async_save=False)
+
+    def save(self, outer: int, x64, extras: Optional[dict] = None):
+        """Persist the iterate after outer pass ``outer`` (atomic)."""
+        self.ckpt.save(outer, {"x64": x64}, extras=extras or {})
+
+    def resume(self, x64_init):
+        """``(x64, start_outer, extras)`` from the newest snapshot, or
+        ``(x64_init, 0, {})`` when the directory holds none."""
+        step = self.ckpt.latest_step()
+        if step is None:
+            return x64_init, 0, {}
+        tree, step, extras = self.ckpt.restore({"x64": x64_init},
+                                               step=step)
+        return tree["x64"], int(step), extras
+
+    def latest_outer(self) -> Optional[int]:
+        return self.ckpt.latest_step()

@@ -271,7 +271,8 @@ def test_runner_checks_subset(tmp_path):
 def test_runner_list_rules(capsys):
     assert analysis_main(["--list-rules"]) == 0
     out = capsys.readouterr().out
-    for rid in ("R1", "R2", "R3", "R4", "J1", "J2", "J3", "J4", "J5"):
+    for rid in ("R1", "R2", "R3", "R4", "J1", "J2", "J3", "J4", "J5",
+                "J6"):
         assert rid in out
 
 
@@ -310,6 +311,11 @@ def test_j4_retrace_budget_healthy():
 
 def test_j5_overlap_interleave_healthy():
     findings = jaxpr_checks.check_overlap_interleave(ROOT)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+def test_j6_nonfinite_guard_healthy():
+    findings = jaxpr_checks.check_nonfinite_guard(ROOT)
     assert findings == [], "\n".join(f.render() for f in findings)
 
 
@@ -431,6 +437,35 @@ def test_j5_catches_serialized_schedule():
     assert rules and set(rules) == {"J5"}
     assert any("serialized behind the halo exchange" in f.message
                for f in findings)
+
+
+def test_j6_catches_guardless_solver():
+    # Seed the violation J6 exists for: the same Krylov trace with the
+    # divergence guard compiled out (guard=False) — every method, both
+    # pipelines, must be flagged as structurally unguarded.
+    import jax
+    from repro.core import solver
+
+    n = 24
+    key = jax.random.PRNGKey(0)
+    G = jax.random.normal(key, (n, n), dtype=jnp.float32)
+    A = G @ G.T + n * jnp.eye(n, dtype=jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n,),
+                          dtype=jnp.float32)
+
+    def unguarded(method, batched):
+        rhs = jnp.stack([b, b]) if batched else b
+        op = (lambda v: v @ A.T) if batched else (lambda v: A @ v)
+        return solver._run_krylov(
+            method, op, op, rhs, tol=1e-6, max_iters=8,
+            recompute_every=0, batched=batched, guard=False)
+
+    findings = jaxpr_checks.check_nonfinite_guard(ROOT, run_fn=unguarded)
+    assert len(findings) == 2 * len(solver.KRYLOV_METHODS)
+    assert {f.rule for f in findings} == {"J6"}
+    assert all("is_finite" in f.message for f in findings)
+    assert findings[0].path == "src/repro/core/solver.py"
+    assert findings[0].line > 1   # anchored at _run_krylov
 
 
 def test_run_jaxpr_checks_validates_ids():
