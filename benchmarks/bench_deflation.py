@@ -1,0 +1,131 @@
+"""Block-CG and low-mode deflation: sublinear repeated solves.
+
+Three claims, each a machine-checkable row in ``BENCH_deflation.json``:
+
+1. **Block-CG shares one Krylov space** (``blockcg_vs_cg_block``) — on
+   a shared-spectrum RHS block, BCGrQ converges in no more iterations
+   than the slowest column of a column-independent batched CG solve
+   (``blockcg_iters <= cg_iters``), at one batched operator apply per
+   iteration either way.
+2. **Lanczos deflation pays** (``deflation_lanczos``) — on a weak-field
+   (smooth) gauge, whose low spectrum is a few isolated degenerate
+   clusters (see :func:`repro.core.su3.weak_gauge`), projecting a
+   once-per-gauge Lanczos basis out of every solve cuts the per-solve
+   iteration count (``deflated_iters < plain_iters``).
+3. **Recycling makes streams sublinear** (``deflation_recycle_stream``)
+   — a recycle-mode session harvests Chebyshev-filtered converged
+   solutions back into the basis, so per-solve iterations DROP across
+   the request stream (``last_iters < first_iters``) with no up-front
+   eigensolve; the per-solve counts ride ``SolveSession.stats()``.
+
+All solves go through the public API (:class:`repro.api.WilsonMatrix` /
+:class:`repro.api.SolveSession`).  The weak-field configuration is the
+honest demonstration bed — on a Haar-random gauge the low modes form a
+quasi-continuum and NO small deflation basis (this or anyone else's)
+buys iterations; that negative result is physics, not implementation.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core import evenodd, su3
+
+from .common import Row, smoke, time_fn, write_json
+
+EPS = 0.2          # weak-field fluctuation strength
+SEED = 7
+
+
+def _setup(shape, kappa):
+    U = su3.weak_gauge(jax.random.PRNGKey(SEED), shape, eps=EPS)
+    Ue, Uo = evenodd.pack_gauge(U)
+    return api.WilsonMatrix.bind(Ue, Uo, kappa, backend="jnp")
+
+
+def _sources(shape, seed, nrhs=None):
+    bshape = (() if nrhs is None else (nrhs,)) + (*shape, 4, 3)
+    eta = (jax.random.normal(jax.random.PRNGKey(seed), bshape)
+           + 1j * jax.random.normal(jax.random.PRNGKey(seed + 5000),
+                                    bshape)).astype(jnp.complex64)
+    if nrhs is None:
+        return evenodd.pack(eta)
+    return jax.vmap(evenodd.pack)(eta)
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    if smoke():
+        shape, kappa, nrhs = (4, 4, 4, 8), 0.1245, 4
+        rank, iters, stream = 24, 160, 14
+        tkw = {"warmup": 1, "iters": 3}
+    else:
+        shape, kappa, nrhs = (8, 8, 8, 8), 0.124, 4
+        rank, iters, stream = 24, 200, 16
+        tkw = {}
+
+    # -- 1. block-CG vs column-independent CG on one RHS block ---------
+    ee, eo = _sources(shape, 31, nrhs=nrhs)
+    iters_by_method = {}
+    for method in ("cg", "blockcg"):
+        sess = api.SolveSession(
+            _setup(shape, kappa),
+            api.SolveSpec(method=method, tol=1e-6, max_iters=2000))
+        _, _, res = sess.solve(ee, eo)
+        iters_by_method[method] = int(jnp.max(res.iterations))
+        if method == "blockcg":
+            us = time_fn(lambda: sess.solve(ee, eo), **tkw)
+    rows.append((
+        "blockcg_vs_cg_block", us,
+        f"blockcg_iters={iters_by_method['blockcg']};"
+        f"cg_iters={iters_by_method['cg']};nrhs={nrhs};"
+        f"iter_ratio={iters_by_method['cg'] / max(iters_by_method['blockcg'], 1):.2f}x"))
+
+    # -- 2. once-per-gauge Lanczos deflation ---------------------------
+    ee1, eo1 = _sources(shape, 41)
+    plain = api.SolveSession(
+        _setup(shape, kappa),
+        api.SolveSpec(method="cg", tol=1e-6, max_iters=2000))
+    _, _, r0 = plain.solve(ee1, eo1)
+    defl = api.SolveSession(
+        _setup(shape, kappa),
+        api.SolveSpec(method="cg", tol=1e-6, max_iters=2000,
+                      deflate_rank=rank, deflate_iters=iters))
+    _, _, r1 = defl.solve(ee1, eo1)
+    us = time_fn(lambda: defl.solve(ee1, eo1), **tkw)
+    drow = next(iter(defl.stats()["keys"].values()))["deflation"]
+    rows.append((
+        "deflation_lanczos", us,
+        f"plain_iters={int(r0.iterations)};"
+        f"deflated_iters={int(r1.iterations)};"
+        f"rank={rank};lanczos_iters={iters};"
+        f"active={drow['active']};"
+        f"iter_ratio={int(r0.iterations) / max(int(r1.iterations), 1):.2f}x"))
+
+    # -- 3. recycle stream: iterations drop, no eigensolve -------------
+    sess = api.SolveSession(
+        _setup(shape, kappa),
+        api.SolveSpec(method="cg", tol=1e-6, max_iters=2000,
+                      deflate_rank=rank, deflate_mode="recycle"))
+    counts = []
+    for i in range(stream):
+        ee_i, eo_i = _sources(shape, 100 + i)
+        _, _, r = sess.solve(ee_i, eo_i)
+        counts.append(int(r.iterations))
+    st = sess.stats()
+    row = next(iter(st["keys"].values()))
+    assert row["iterations"] == counts  # the stats surface IS the claim
+    d = row["deflation"]
+    steady = row["steady_state_s"] or 0.0
+    rows.append((
+        "deflation_recycle_stream", steady * 1e6,
+        f"first_iters={counts[0]};last_iters={counts[-1]};"
+        f"stream={'|'.join(str(c) for c in counts)};"
+        f"harvested={d['harvested']};active={d['active']};"
+        f"traces={st['traces']}"))
+
+    write_json("deflation", rows)
+    return rows

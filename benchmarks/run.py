@@ -29,7 +29,7 @@ import sys
 import traceback
 
 BENCHES = ("tiling", "breakdown", "halo", "solver", "scaling", "lm",
-           "multirhs", "resilience")
+           "multirhs", "resilience", "deflation")
 
 
 def main() -> None:

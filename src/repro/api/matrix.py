@@ -85,6 +85,10 @@ class WilsonMatrix:
         self.fallback_events: Tuple[Tuple[str, str], ...] = ()
         self.requested_backend = backend.name if backend else None
         self.gauge_audit = None
+        # Deflation subspaces, keyed (rank, mode) — computed once per
+        # bound gauge by ensure_deflation and shared by every session /
+        # spec that asks for the same knobs.
+        self._deflation = {}
 
     # --- construction -------------------------------------------------
 
@@ -327,6 +331,90 @@ class WilsonMatrix:
               if self._native_batched(v)
               else self.ops.apply_dhat_dagger_native)
         return fn(v, self.kappa)
+
+    # deflation ---------------------------------------------------------
+
+    def ensure_deflation(self, rank: int, mode: str = "lanczos", *,
+                         checkpoint: Optional[str] = None,
+                         lanczos_iters: Optional[int] = None):
+        """The bound gauge's deflation state for ``(rank, mode)``,
+        building it on first request and caching it on the matrix.
+
+        ``mode="lanczos"`` runs the once-per-gauge Lanczos pass over the
+        normal operator ``Dhat^dag Dhat`` (seeded deterministically from
+        the lattice shape, so rebinding the same gauge reproduces the
+        same basis); ``mode="recycle"`` starts empty and grows from
+        harvested solutions (:meth:`repro.core.deflate.DeflationState.
+        harvest_column`, driven by :class:`~repro.api.SolveSession`).
+        ``checkpoint`` names a :class:`repro.resilience.BasisSnapshot`
+        directory: a basis found there (matching shapes) is restored
+        instead of rebuilt, and recycle harvests persist as they land.
+        """
+        rank = int(rank)
+        if rank < 1:
+            raise ValueError(f"deflation rank must be >= 1; got {rank}")
+        key = (rank, str(mode), lanczos_iters)
+        state = self._deflation.get(key)
+        if state is not None:
+            return state
+        from repro.core import deflate as _defl
+        ops = self.ops
+        kappa = self.kappa
+
+        def normal(v):
+            return ops.apply_dhat_dagger_native(
+                ops.apply_dhat_native(v, kappa), kappa)
+
+        def normal_batched(v):
+            return ops.apply_dhat_dagger_native_batched(
+                ops.apply_dhat_native_batched(v, kappa), kappa)
+
+        # Deterministic unit-norm start vector through the backend's
+        # own encoder — native domain, fixed seed.
+        psi = jax.random.normal(
+            jax.random.PRNGKey(20240331),
+            self.lattice.spinor_eo_shape() + (2,)).astype(jnp.float32)
+        psi = jax.lax.complex(psi[..., 0], psi[..., 1])
+        v0 = ops.to_domain(psi)
+
+        snap = None
+        if checkpoint is not None:
+            from repro.resilience import BasisSnapshot
+            snap = BasisSnapshot(checkpoint)
+        template = _defl.empty_basis(rank, v0)
+        restored = snap.resume(template) if snap is not None else None
+        if mode == "lanczos":
+            if restored is not None and _defl.DeflationBasis(
+                    *restored).count() > 0:
+                basis = _defl.DeflationBasis(*restored)
+            else:
+                basis = _defl.lanczos_basis(
+                    normal, v0, rank, iters=lanczos_iters,
+                    op_batched=normal_batched)
+                if snap is not None:
+                    snap.save(basis.count(), basis)
+            state = _defl.DeflationState(basis, "lanczos", snapshot=snap)
+        elif mode == "recycle":
+            raw = (_defl.DeflationBasis(*restored)
+                   if restored is not None else template)
+            refine = _defl.make_ritz_refine(_defl.RECYCLE_QUALITY)
+            basis = (_defl.DeflationBasis(*refine(raw))
+                     if raw.count() > 0 else raw)
+            # Top-of-spectrum estimate scales the Chebyshev harvest
+            # filter (see make_recycle_update) — a dozen applies, once
+            # per basis.
+            lam = _defl.estimate_lambda_max(normal, v0)
+            state = _defl.DeflationState(
+                basis, "recycle",
+                update_fn=_defl.make_recycle_update(
+                    normal, lam_max=1.1 * lam),
+                refine_fn=refine, snapshot=snap, raw=raw)
+        else:
+            raise ValueError(
+                f"unknown deflation mode {mode!r}; choose 'lanczos' or "
+                "'recycle'")
+        self._deflation[key] = state
+        return state
 
     # refined solves need the complex gauge back ------------------------
 

@@ -11,9 +11,12 @@ needs, and the one the paper buys on A64FX by packing the gauge layout
 once outside the hot loop.
 
 ``session.stats()`` is the observability hook: trace counts (compiles),
-cache hits/misses, per-key first-solve vs steady-state wall times, and
-the resilience ledger — backend fallbacks taken, the ``degraded`` flag,
-and per-refined-key outer-iteration / precision-escalation histories.
+cache hits/misses, per-key first-solve vs steady-state wall times,
+per-solve Krylov iteration counts in call order (the surface where a
+recycle-deflated key shows its iterations *dropping* across a request
+stream), and the resilience ledger — backend fallbacks taken, the
+``degraded`` flag, and per-refined-key outer-iteration /
+precision-escalation histories.
 """
 from __future__ import annotations
 
@@ -34,14 +37,17 @@ __all__ = ["SolveSession"]
 
 
 class _CacheEntry:
-    __slots__ = ("fn", "kind", "times", "outer", "escalations")
+    __slots__ = ("fn", "kind", "times", "outer", "escalations",
+                 "iterations", "deflation")
 
-    def __init__(self, fn, kind):
+    def __init__(self, fn, kind, deflation=None):
         self.fn = fn
         self.kind = kind          # "plain" | "refined"
         self.times = []           # per-solve wall seconds, in call order
         self.outer = []           # refined: outer iterations per solve
         self.escalations = []     # refined: dtype rungs climbed per solve
+        self.iterations = []      # plain: max Krylov iterations per solve
+        self.deflation = deflation  # DeflationState driving this key
 
 
 class SolveSession:
@@ -119,6 +125,7 @@ class SolveSession:
         if entry is None:
             entry = self._build(spec, batched)
 
+        x_native = None
         if entry.kind == "refined":
             xi_e, xi_o, res = entry.fn(eta_e, eta_o)
         else:
@@ -128,7 +135,12 @@ class SolveSession:
                 v_o = ops.to_domain_batched(eta_o)
             else:
                 v_e, v_o = ops.to_domain(eta_e), ops.to_domain(eta_o)
-            x, v_xi_o, res = entry.fn(v_e, v_o)
+            if entry.deflation is not None:
+                x, v_xi_o, res = entry.fn(v_e, v_o,
+                                          entry.deflation.basis)
+            else:
+                x, v_xi_o, res = entry.fn(v_e, v_o)
+            x_native = x
             from_dom = (ops.from_domain_batched if batched
                         else ops.from_domain)
             # Decode keeps the caller's spinor dtype (c128 under x64).
@@ -147,8 +159,33 @@ class SolveSession:
         if entry.kind == "refined":
             entry.outer.append(int(res.outer_iterations))
             entry.escalations.append(tuple(res.escalations))
+        else:
+            entry.iterations.append(int(jnp.max(res.iterations)))
         entry.times.append(time.perf_counter() - t0)
+        self._maybe_harvest(entry, x_native, res, batched)
         return xi_e, xi_o, res
+
+    def _maybe_harvest(self, entry, x_native, res, batched):
+        """Feed converged solutions of a recycle-deflated key back into
+        the basis (x solves the normal system ``A x = Dhat^dag rhs``, so
+        it is naturally rich in A's low modes); the next solve of the
+        same key sees the grown basis as a changed jit *argument* — no
+        retrace."""
+        state = entry.deflation
+        if (state is None or state.mode != "recycle"
+                or x_native is None or state.count >= state.rank):
+            return
+        if batched:
+            ok = jax.device_get(res.converged)
+            for j, conv in enumerate(ok):
+                if not conv:
+                    continue
+                col = jax.tree_util.tree_map(lambda l: l[j], x_native)
+                state.harvest_column(col)
+                if state.count >= state.rank:
+                    break
+        elif bool(res.converged):
+            state.harvest_column(x_native)
 
     def _escalation_factory(self):
         """A ``bops_factory`` for the refined solve's precision ladder:
@@ -198,22 +235,34 @@ class SolveSession:
             self._counters["traces"] += 1
             return _CacheEntry(fn, "refined")
 
+        deflation = None
+        if spec.deflate_rank > 0:
+            deflation = self.matrix.ensure_deflation(
+                spec.deflate_rank, spec.deflate_mode,
+                checkpoint=spec.deflate_checkpoint,
+                lanczos_iters=spec.deflate_iters)
         native = _solver.make_native_solve(
             self.matrix.ops, self.matrix.kappa, method=spec.method,
             tol=spec.tol, max_iters=spec.max_iters,
             recompute_every=spec.recompute_every, batched=batched,
             guard=spec.guard,
             stagnation_window=spec.stagnation_window,
-            max_restarts=spec.max_restarts)
+            max_restarts=spec.max_restarts,
+            deflated=deflation is not None)
         counters = self._counters
 
-        def counted(v_e, v_o):
-            # Python side effect at trace time only: counts real
-            # (re)compiles, not calls.
-            counters["traces"] += 1
-            return native(v_e, v_o)
+        if deflation is not None:
+            def counted(v_e, v_o, basis):
+                counters["traces"] += 1
+                return native(v_e, v_o, basis)
+        else:
+            def counted(v_e, v_o):
+                # Python side effect at trace time only: counts real
+                # (re)compiles, not calls.
+                counters["traces"] += 1
+                return native(v_e, v_o)
 
-        return _CacheEntry(jax.jit(counted), "plain")
+        return _CacheEntry(jax.jit(counted), "plain", deflation)
 
     # --- observability ------------------------------------------------
 
@@ -239,6 +288,19 @@ class SolveSession:
             if entry.kind == "refined":
                 row["outer_iterations"] = list(entry.outer)
                 row["escalations"] = [list(e) for e in entry.escalations]
+            else:
+                # Per-solve Krylov iteration counts in call order — on a
+                # recycle-deflated key this is where the drop across the
+                # request stream shows up.
+                row["iterations"] = list(entry.iterations)
+            if entry.deflation is not None:
+                row["deflation"] = {
+                    "mode": entry.deflation.mode,
+                    "rank": entry.deflation.rank,
+                    "filled": entry.deflation.count,
+                    "active": entry.deflation.active,
+                    "harvested": entry.deflation.harvested,
+                }
             keys["|".join([spec.cache_token(), f"shape={shape}",
                            f"dtype={dtype}"])] = row
         return {

@@ -231,9 +231,28 @@ class SolveSpec:
     ``max_restarts``; ``escalate`` lets a stalling refined solve climb
     the inner-dtype precision ladder
     (:data:`repro.core.solver.ESCALATION_LADDER`).
+
+    Deflation knobs (:mod:`repro.core.deflate`): ``deflate_rank > 0``
+    turns on low-mode deflation of the normal operator for the
+    normal-equations methods (:data:`repro.core.solver.DEFLATABLE_METHODS`)
+    — the subspace is computed once per bound gauge and cached on the
+    :class:`~repro.api.WilsonMatrix`.  ``deflate_mode`` picks how the
+    subspace is built: ``"lanczos"`` pays an up-front eigensolve;
+    ``"recycle"`` starts empty and harvests converged solutions from
+    the request stream, so per-solve iteration counts drop as the
+    stream proceeds (watch ``SolveSession.stats()``).
+    ``deflate_iters`` caps the Lanczos step count (``None`` = auto;
+    raise it when the low spectrum is degenerate — single-vector
+    Lanczos resolves one copy of a degenerate cluster per ~cluster
+    revisit, so finding all of them needs more steps than the
+    default).
+    ``deflate_checkpoint`` names a directory where the basis is
+    persisted (:class:`repro.resilience.BasisSnapshot`) and restored
+    from on a later bind of the same gauge.
     """
 
     METHODS = _solver.KRYLOV_METHODS
+    DEFLATE_MODES = ("lanczos", "recycle")
 
     method: str = "cgnr"
     tol: float = 1e-6
@@ -247,6 +266,10 @@ class SolveSpec:
     stagnation_window: int = _solver.STAGNATION_WINDOW
     max_restarts: int = _solver.MAX_RESTARTS
     escalate: bool = True
+    deflate_rank: int = 0
+    deflate_mode: str = "lanczos"
+    deflate_iters: Optional[int] = None
+    deflate_checkpoint: Optional[str] = None
 
     def __post_init__(self):
         if self.method not in self.METHODS:
@@ -280,6 +303,30 @@ class SolveSpec:
         if self.max_restarts < 0:
             raise ValueError(
                 f"max_restarts must be >= 0; got {self.max_restarts}")
+        if self.deflate_rank < 0:
+            raise ValueError(
+                f"deflate_rank must be >= 0 (0 = no deflation); got "
+                f"{self.deflate_rank}")
+        if self.deflate_mode not in self.DEFLATE_MODES:
+            raise ValueError(
+                f"unknown deflate_mode {self.deflate_mode!r}; choose "
+                f"from {self.DEFLATE_MODES}")
+        if self.deflate_iters is not None and self.deflate_iters < 1:
+            raise ValueError(
+                f"deflate_iters must be >= 1 (None = auto); got "
+                f"{self.deflate_iters}")
+        if self.deflate_rank > 0:
+            if self.method not in _solver.DEFLATABLE_METHODS:
+                raise ValueError(
+                    f"deflation applies to the normal-equations methods "
+                    f"{_solver.DEFLATABLE_METHODS}, not "
+                    f"{self.method!r}")
+            if self.inner_dtype is not None:
+                raise ValueError(
+                    "deflation and mixed-precision refinement "
+                    "(inner_dtype) are not combinable yet: the deflation "
+                    "basis lives on the native normal operator, which "
+                    "the refined solve rebuilds per escalation rung")
 
     def validate_rhs(self, eta_e, eta_o, lattice: LatticeSpec) -> bool:
         """Check a source pair against the lattice and ``nrhs``;
@@ -325,4 +372,8 @@ class SolveSpec:
                 parts.append(f"sw{self.stagnation_window}")
             if self.max_restarts != _solver.MAX_RESTARTS:
                 parts.append(f"mr{self.max_restarts}")
+        if self.deflate_rank:
+            parts.append(f"defl{self.deflate_rank}-{self.deflate_mode}")
+            if self.deflate_iters is not None:
+                parts.append(f"li{self.deflate_iters}")
         return ":".join(parts)

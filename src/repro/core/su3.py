@@ -37,6 +37,30 @@ def unit_gauge(lat_shape: Sequence[int], dtype=jnp.complex64) -> jnp.ndarray:
     return jnp.broadcast_to(eye, (NDIM, *lat_shape, 3, 3))
 
 
+def weak_gauge(key: jax.Array, lat_shape: Sequence[int],
+               eps: float = 0.2, dtype=jnp.complex64) -> jnp.ndarray:
+    """Weak-field (smooth) gauge configuration ``U = exp(i eps H)``
+    with ``H`` random Hermitian traceless — exactly SU(3), a small
+    fluctuation around the free field.
+
+    The physics that makes this the deflation test bed: a smooth
+    configuration keeps the free operator's momentum-mode structure, so
+    the low end of ``Dhat^dag Dhat`` is a few ISOLATED (and degenerate
+    — 12-fold at p=0: 4 spinor x 3 color) clusters that a small
+    deflation basis can actually remove, whereas a Haar-random ("hot")
+    gauge smears the low spectrum into a quasi-continuum no small basis
+    helps with.
+    """
+    kr, ki = jax.random.split(key)
+    shape = (NDIM, *lat_shape, 3, 3)
+    a = (jax.random.normal(kr, shape)
+         + 1j * jax.random.normal(ki, shape)).astype(jnp.complex64)
+    h = 0.5 * (a + jnp.conj(jnp.swapaxes(a, -1, -2)))
+    tr = jnp.trace(h, axis1=-2, axis2=-1) / 3.0
+    h = h - tr[..., None, None] * jnp.eye(3, dtype=h.dtype)
+    return jax.scipy.linalg.expm(1j * eps * h).astype(dtype)
+
+
 def compress_two_row(U: jnp.ndarray) -> jnp.ndarray:
     """Keep the first two rows: ``(..., 3, 3)`` -> ``(..., 2, 3)``.
 

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from repro import api, backends, configs
 from repro.checkpoint.ckpt import Checkpointer
 from repro.core import evenodd, su3, wilson
+from repro.core import solver as _solver
 
 
 def _backend_help() -> str:
@@ -105,6 +106,22 @@ def main(argv=None):
     ap.add_argument("--recompute-every", type=int, default=0,
                     help="recompute the true residual every N Krylov "
                          "iterations (0 = never)")
+    ap.add_argument("--deflate-rank", type=int, default=0,
+                    help="low-mode deflation rank (0 = off): project "
+                         "the normal operator's low modes out of every "
+                         "solve of this gauge (methods: "
+                         + ", ".join(_solver.DEFLATABLE_METHODS) + ")")
+    ap.add_argument("--deflate-mode", default="lanczos",
+                    choices=list(api.SolveSpec.DEFLATE_MODES),
+                    help="how the deflation basis is built: 'lanczos' "
+                         "pays a once-per-gauge eigensolve; 'recycle' "
+                         "starts empty and harvests converged solutions "
+                         "from the stream (per-solve iterations drop as "
+                         "it fills — watch the session stats)")
+    ap.add_argument("--deflate-iters", type=int, default=0,
+                    help="Lanczos step count for --deflate-mode lanczos "
+                         "(0 = auto; raise it when the low spectrum is "
+                         "degenerate)")
     ap.add_argument("--validate", default="none",
                     choices=["none", "warn", "repair"],
                     help="SU(3) gauge-integrity audit at bind: 'warn' "
@@ -156,7 +173,10 @@ def main(argv=None):
         method=args.method, tol=args.tol,
         recompute_every=args.recompute_every,
         nrhs=args.nrhs if args.nrhs > 1 else None,
-        inner_dtype=inner_dtype)
+        inner_dtype=inner_dtype,
+        deflate_rank=args.deflate_rank,
+        deflate_mode=args.deflate_mode,
+        deflate_iters=args.deflate_iters or None)
 
     T, Z, Y, X = lattice.extents
     print(f"lattice {lattice.extents}, kappa={args.kappa}, "
@@ -233,8 +253,15 @@ def main(argv=None):
     for keystr, row in st["keys"].items():
         steady = (f"{row['steady_state_s']:.3f}s"
                   if row["steady_state_s"] is not None else "n/a")
-        print(f"session[{keystr}]: solves={row['solves']} "
-              f"first={row['first_solve_s']:.3f}s steady={steady}")
+        line = (f"session[{keystr}]: solves={row['solves']} "
+                f"first={row['first_solve_s']:.3f}s steady={steady}")
+        if row.get("iterations"):
+            line += f" iters={row['iterations']}"
+        if row.get("deflation"):
+            d = row["deflation"]
+            line += (f" deflation={d['mode']}:{d['filled']}/{d['rank']}"
+                     f" active={d['active']}")
+        print(line)
     print(f"session: solves={st['solves']} traces={st['traces']} "
           f"cache_hits={st['cache_hits']} "
           f"cache_misses={st['cache_misses']} "

@@ -38,10 +38,11 @@ from .inject import (
     nan_spinor_column,
     stagnating_system,
 )
-from .snapshot import RefinementSnapshot
+from .snapshot import BasisSnapshot, RefinementSnapshot
 from .validate import GaugeAuditReport, audit_gauge, repair_gauge
 
 __all__ = [
+    "BasisSnapshot",
     "GaugeAuditReport",
     "InjectedFault",
     "RefinementSnapshot",

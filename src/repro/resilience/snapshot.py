@@ -46,3 +46,44 @@ class RefinementSnapshot:
 
     def latest_outer(self) -> Optional[int]:
         return self.ckpt.latest_step()
+
+
+class BasisSnapshot:
+    """Checkpoint a deflation basis (:mod:`repro.core.deflate`).
+
+    The Lanczos pass (or a stream of recycled solutions) is the
+    expensive once-per-gauge part of deflated solving; the basis itself
+    is a small fixed-shape pytree — the natural snapshot unit.  A
+    long-lived serving process that re-binds the same gauge restores
+    the basis instead of re-paying the build; a recycle basis is saved
+    after every harvest, so a restart resumes with everything the
+    stream has learned so far.  ``step`` is the basis fill count, so
+    LATEST always points at the fullest snapshot.
+    """
+
+    def __init__(self, directory: str, keep: int = 2):
+        self.ckpt = Checkpointer(directory, keep=keep, async_save=False)
+
+    def save(self, count: int, basis, extras: Optional[dict] = None):
+        """Persist ``basis`` holding ``count`` filled slots (atomic)."""
+        self.ckpt.save(count, basis, extras=extras or {})
+
+    def resume(self, template):
+        """Newest snapshot matching ``template``'s structure/shapes, or
+        ``None`` (no snapshot, or a stale one of a different rank /
+        domain layout — rebuilding beats restoring garbage)."""
+        step = self.ckpt.latest_step()
+        if step is None:
+            return None
+        try:
+            tree, _, _ = self.ckpt.restore(template, step=step)
+        except Exception:
+            return None
+        import jax
+
+        ref = jax.tree_util.tree_leaves(template)
+        got = jax.tree_util.tree_leaves(tree)
+        if any(g.shape != r.shape or g.dtype != r.dtype
+               for g, r in zip(got, ref)):
+            return None
+        return tree

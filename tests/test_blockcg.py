@@ -1,0 +1,90 @@
+"""Block CG (BCGrQ): shared Krylov space over an RHS block.
+
+Dense-operator unit tests for the properties the lattice bench
+(``benchmarks/bench_deflation.py``) demonstrates at scale: convergence
+no slower than column-independent CG, rank-deficiency tolerance
+(duplicate columns), per-column freeze, and NaN-column isolation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import solver
+
+
+def _spd(n=64, seed=0):
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (n, n), dtype=jnp.float32)
+    return g @ g.T + n * jnp.eye(n, dtype=jnp.float32)
+
+
+def _rhs(n, nrhs, seed=1):
+    return jax.random.normal(jax.random.PRNGKey(seed), (nrhs, n),
+                             dtype=jnp.float32)
+
+
+def test_blockcg_converges_and_matches_cg_batched():
+    """BCGrQ solves the block to the same tolerance in no more
+    iterations than the slowest column of independent batched CG —
+    the shared Krylov space can only help."""
+    A = _spd()
+    bb = _rhs(A.shape[0], 4)
+    op = lambda v: v @ A.T  # noqa: E731
+    blk = solver.blockcg_batched(op, bb, tol=1e-6, max_iters=300)
+    ind = solver.cg_batched(op, bb, tol=1e-6, max_iters=300)
+    assert bool(jnp.all(blk.converged))
+    assert int(jnp.max(blk.iterations)) <= int(jnp.max(ind.iterations))
+    rel = jnp.linalg.norm(bb - blk.x @ A.T, axis=1) \
+        / jnp.linalg.norm(bb, axis=1)
+    assert float(jnp.max(rel)) < 1e-5
+
+
+def test_blockcg_duplicate_columns():
+    """A rank-deficient RHS block (duplicate columns) must not break
+    the shared-space QR: the eps-ridge keeps the S-solve well posed and
+    both copies converge to the same solution."""
+    A = _spd(seed=2)
+    bb = _rhs(A.shape[0], 3, seed=3)
+    bb = bb.at[2].set(bb[0])
+    res = solver.blockcg_batched(lambda v: v @ A.T, bb,
+                                 tol=1e-6, max_iters=300)
+    assert bool(jnp.all(res.converged))
+    np.testing.assert_allclose(np.asarray(res.x[2]),
+                               np.asarray(res.x[0]),
+                               rtol=1e-4, atol=1e-6)
+    rel = jnp.linalg.norm(bb - res.x @ A.T, axis=1) \
+        / jnp.linalg.norm(bb, axis=1)
+    assert float(jnp.max(rel)) < 1e-5
+
+
+def test_blockcg_nan_column_isolated():
+    """A poisoned column is flagged diverged while the healthy columns
+    of the SAME block solve converge to full accuracy (the divergence
+    guard isolates it from the shared recursion)."""
+    A = _spd(seed=4)
+    bb = _rhs(A.shape[0], 3, seed=5)
+    bb = bb.at[1, 0].set(jnp.nan)
+    res = solver.blockcg_batched(lambda v: v @ A.T, bb,
+                                 tol=1e-6, max_iters=300)
+    assert bool(res.diverged[1]) and not bool(res.converged[1])
+    for col in (0, 2):
+        assert bool(res.converged[col]) and not bool(res.diverged[col])
+        assert bool(jnp.all(jnp.isfinite(res.x[col])))
+        rel = float(jnp.linalg.norm(bb[col] - A @ res.x[col])
+                    / jnp.linalg.norm(bb[col]))
+        assert rel < 1e-5
+
+
+def test_blockcg_unbatched_degenerates_to_cg():
+    """method="blockcg" on a single (unbatched) RHS is plain CG —
+    same solution, same iteration count."""
+    A = _spd(seed=6)
+    b = _rhs(A.shape[0], 1, seed=7)[0]
+    op = lambda v: A @ v  # noqa: E731
+    blk = solver._run_krylov("blockcg", op, op, b, tol=1e-6,
+                             max_iters=300, recompute_every=0)
+    plain = solver._run_krylov("cg", op, op, b, tol=1e-6,
+                               max_iters=300, recompute_every=0)
+    assert bool(blk.converged)
+    assert int(blk.iterations) == int(plain.iterations)
+    assert bool(jnp.all(blk.x == plain.x))

@@ -124,3 +124,97 @@ def test_even_odd_preconditioning_helps(small_lattice, small_eo):
         lambda v: wilson.apply_wilson_dagger(U, v, kappa),
         eta, tol=1e-6, max_iters=2000)
     assert int(res_eo.iterations) < int(full.iterations)
+
+
+def _drifty_spd(n=96, seed=5):
+    """f32 SPD with a small low-mode cluster: enough spread that the
+    recursive residual drifts below the true one near the floor — the
+    regime where the recompute correction used to trip the stagnation
+    guard."""
+    key = jax.random.PRNGKey(seed)
+    q, _ = jnp.linalg.qr(jax.random.normal(key, (n, n),
+                                           dtype=jnp.float32))
+    ev = jnp.concatenate(
+        [jnp.linspace(1e-3, 1e-2, 8),
+         jnp.linspace(0.5, 2.0, n - 8)]).astype(jnp.float32)
+    A = (q * ev) @ q.T
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n,),
+                          dtype=jnp.float32)
+    return A, b
+
+
+def test_recompute_guard_zero_false_restarts():
+    """Regression: recompute_every x stagnation guard.  The recomputed
+    true residual reads higher than the stale recursive minimum; before
+    the window re-baseline that counted as "no improvement" and a
+    healthy solve burned restarts into a false ``diverged``.  Restarts
+    are not surfaced on SolveResult, so "zero restarts fired" is
+    asserted as bit-exactness against a ``max_restarts=0`` run (a fired
+    restart re-seeds the search direction and forks the trajectory)."""
+    A, b = _drifty_spd()
+    op = lambda v: A @ v  # noqa: E731
+    kw = dict(recompute_every=3, stagnation_window=8, guard=True)
+    # converging run: recompute more frequent than the window
+    ra = solver.cg(op, b, tol=1e-5, max_iters=300, max_restarts=2, **kw)
+    rb = solver.cg(op, b, tol=1e-5, max_iters=300, max_restarts=0, **kw)
+    assert bool(ra.converged) and not bool(ra.diverged)
+    assert int(ra.iterations) == int(rb.iterations)
+    assert bool(jnp.all(ra.x == rb.x))
+    # floor run: tol=0 parks the solve at the f32 drift floor, where the
+    # pre-fix guard falsely diverged within ~64 iterations
+    fa = solver.cg(op, b, tol=0.0, max_iters=300, max_restarts=2, **kw)
+    fb = solver.cg(op, b, tol=0.0, max_iters=300, max_restarts=0, **kw)
+    assert not bool(fa.diverged) and not bool(fb.diverged)
+    assert bool(jnp.all(fa.x == fb.x))
+
+
+def test_batched_frozen_column_bit_exact():
+    """A column that converges early is frozen bit-exactly: running the
+    batch longer (for the slow columns' sake) cannot touch it."""
+    A, _ = _drifty_spd()
+    n = A.shape[0]
+    key = jax.random.PRNGKey(11)
+    # col 0 low-mode-free (fast), col 1 random (slow)
+    ev, q = jnp.linalg.eigh(A)
+    del ev
+    fast = (q[:, -n // 2:] @ jax.random.normal(
+        key, (n // 2,), dtype=jnp.float32))
+    slow = jax.random.normal(jax.random.fold_in(key, 1), (n,),
+                             dtype=jnp.float32)
+    bb = jnp.stack([fast, slow])
+    op = lambda v: v @ A.T  # noqa: E731
+    full = solver.cg_batched(op, bb, tol=1e-3, max_iters=300,
+                             recompute_every=5)
+    it0, it1 = int(full.iterations[0]), int(full.iterations[1])
+    assert bool(jnp.all(full.converged)) and it0 < it1
+    short = solver.cg_batched(op, bb, tol=1e-3, max_iters=it0,
+                              recompute_every=5)
+    assert bool(short.converged[0])
+    assert bool(jnp.all(full.x[0] == short.x[0]))
+
+
+def test_cgnr_reports_true_system_residual():
+    """Regression: cgnr's exit residual is the TRUE-system relative
+    residual |b - A x| / |b| (recomputed at exit), not the normal-
+    equations residual |A^H(b - A x)| the inner CG iterates on."""
+    n = 80
+    key = jax.random.PRNGKey(13)
+    A = (jax.random.normal(key, (n, n), dtype=jnp.float32)
+         + n * jnp.eye(n, dtype=jnp.float32))          # nonsymmetric
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n,),
+                          dtype=jnp.float32)
+    res = solver.cgnr(lambda v: A @ v, lambda v: A.T @ v, b,
+                      tol=1e-6, max_iters=500)
+    assert bool(res.converged)
+    rel = float(jnp.linalg.norm(b - A @ res.x) / jnp.linalg.norm(b))
+    assert np.isclose(float(res.residual), rel, rtol=1e-3, atol=1e-9)
+
+    bb = jnp.stack([b, jax.random.normal(jax.random.fold_in(key, 2),
+                                         (n,), dtype=jnp.float32)])
+    bres = solver.cgnr_batched(lambda v: v @ A.T, lambda v: v @ A, bb,
+                               tol=1e-6, max_iters=500)
+    assert bool(jnp.all(bres.converged))
+    rels = jnp.linalg.norm(bb - bres.x @ A.T, axis=1) \
+        / jnp.linalg.norm(bb, axis=1)
+    np.testing.assert_allclose(np.asarray(bres.residual),
+                               np.asarray(rels), rtol=1e-3, atol=1e-9)
