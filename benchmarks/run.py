@@ -29,7 +29,7 @@ import sys
 import traceback
 
 BENCHES = ("tiling", "breakdown", "halo", "solver", "scaling", "lm",
-           "multirhs", "resilience", "deflation")
+           "multirhs", "resilience", "deflation", "serving")
 
 
 def main() -> None:

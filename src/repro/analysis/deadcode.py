@@ -32,7 +32,8 @@ from typing import Dict, Iterable, List, Set, Tuple
 #: NOT a root — it is a harvest target (see :data:`INTENTIONAL`), so it
 #: and everything only it reaches must show up in the report.
 ROOTS = ("repro.api", "repro.launch.solve", "repro.launch.dryrun",
-         "repro.launch.roofline", "repro.analysis.__main__")
+         "repro.launch.roofline", "repro.launch.serve",
+         "repro.analysis.__main__")
 
 #: Dormant-on-purpose prefixes → the ROADMAP item that plans to harvest
 #: them.  These still appear in the report, annotated, so the list stays

@@ -38,7 +38,7 @@ __all__ = ["SolveSession"]
 
 class _CacheEntry:
     __slots__ = ("fn", "kind", "times", "outer", "escalations",
-                 "iterations", "deflation")
+                 "iterations", "col_iterations", "deflation")
 
     def __init__(self, fn, kind, deflation=None):
         self.fn = fn
@@ -47,6 +47,7 @@ class _CacheEntry:
         self.outer = []           # refined: outer iterations per solve
         self.escalations = []     # refined: dtype rungs climbed per solve
         self.iterations = []      # plain: max Krylov iterations per solve
+        self.col_iterations = []  # plain batched: per-column counts
         self.deflation = deflation  # DeflationState driving this key
 
 
@@ -161,9 +162,53 @@ class SolveSession:
             entry.escalations.append(tuple(res.escalations))
         else:
             entry.iterations.append(int(jnp.max(res.iterations)))
+            if getattr(res.iterations, "ndim", 0) >= 1:
+                # Per-column counts of the batched solve, for the
+                # serving layer's split-back observability: each
+                # coalesced request's own iteration cost is visible,
+                # not just the batch maximum.
+                entry.col_iterations.append(
+                    [int(i) for i in res.iterations])
         entry.times.append(time.perf_counter() - t0)
         self._maybe_harvest(entry, x_native, res, batched)
         return xi_e, xi_o, res
+
+    def solve_block(self, eta_e, eta_o, spec: Optional[SolveSpec] = None,
+                    *, donate: bool = False, bounds=None):
+        """Batched serving entry: solve one coalesced RHS block and
+        split the result back per request.
+
+        ``eta_e`` / ``eta_o`` is a multi-RHS block (a leading ``nrhs``
+        axis; a single 6-d source pair is promoted to a block of one).
+        ``bounds`` maps batch columns back to the independent requests
+        that were coalesced into the block — a sequence of ``(lo, hi)``
+        column ranges (default: one range per column); the returned
+        ``parts`` list holds one per-request result each, produced by
+        :func:`repro.core.solver.split_columns` (per-column iterations
+        / residuals / convergence verdicts — meaningful independently
+        because converged columns freeze bit-exactly).
+
+        ``donate=True`` switches the cache entry to a buffer-donating
+        executable (see :class:`~repro.api.SolveSpec` ``donate_rhs``):
+        the sources are consumed by the solve — the contract a
+        coalescing daemon wants for the batch temporaries it assembles.
+
+        Returns ``(xi_e, xi_o, res, parts)``.
+        """
+        spec = self.default_spec if spec is None else spec
+        if eta_e.ndim == 6:
+            eta_e, eta_o = eta_e[None], eta_o[None]
+        nrhs = int(eta_e.shape[0])
+        if spec.nrhs is not None and spec.nrhs != nrhs:
+            # A serving block's size is chosen by the batcher, not the
+            # spec; a pinned nrhs would just fragment the cache.
+            spec = dataclasses.replace(spec, nrhs=None)
+        if donate and not spec.donate_rhs:
+            spec = dataclasses.replace(spec, donate_rhs=True)
+        xi_e, xi_o, res = self.solve(eta_e, eta_o, spec)
+        if bounds is None:
+            bounds = [(j, j + 1) for j in range(nrhs)]
+        return xi_e, xi_o, res, _solver.split_columns(res, bounds)
 
     def _maybe_harvest(self, entry, x_native, res, batched):
         """Feed converged solutions of a recycle-deflated key back into
@@ -262,7 +307,13 @@ class SolveSession:
                 counters["traces"] += 1
                 return native(v_e, v_o)
 
-        return _CacheEntry(jax.jit(counted), "plain", deflation)
+        # donate_rhs: the encoded source vectors (argnums 0/1; a
+        # deflation basis argument is never donated) are handed to XLA
+        # for reuse — the serving hot path's batch temporaries.
+        # Platforms without donation support warn and run undonated.
+        jit_kw = {"donate_argnums": (0, 1)} if spec.donate_rhs else {}
+        return _CacheEntry(jax.jit(counted, **jit_kw), "plain",
+                           deflation)
 
     # --- observability ------------------------------------------------
 
@@ -293,6 +344,9 @@ class SolveSession:
                 # recycle-deflated key this is where the drop across the
                 # request stream shows up.
                 row["iterations"] = list(entry.iterations)
+                if entry.col_iterations:
+                    row["col_iterations"] = [
+                        list(c) for c in entry.col_iterations]
             if entry.deflation is not None:
                 row["deflation"] = {
                     "mode": entry.deflation.mode,

@@ -249,6 +249,17 @@ class SolveSpec:
     ``deflate_checkpoint`` names a directory where the basis is
     persisted (:class:`repro.resilience.BasisSnapshot`) and restored
     from on a later bind of the same gauge.
+
+    ``donate_rhs`` marks the solve's (encoded) source buffers as
+    donated to the compiled executable — the serving hot path's knob:
+    a request batch assembled by the coalescing daemon is a temporary
+    the caller never reads again, so XLA may reuse its bytes for the
+    solution block instead of allocating a fresh one.  The caller MUST
+    NOT touch the source arrays after the solve (for backends whose
+    native domain is the complex layout the encoded vector aliases the
+    caller's array).  Plain (non-refined) solves only; some platforms
+    (CPU) may decline donation with a warning and run correctly
+    without the reuse.
     """
 
     METHODS = _solver.KRYLOV_METHODS
@@ -270,6 +281,7 @@ class SolveSpec:
     deflate_mode: str = "lanczos"
     deflate_iters: Optional[int] = None
     deflate_checkpoint: Optional[str] = None
+    donate_rhs: bool = False
 
     def __post_init__(self):
         if self.method not in self.METHODS:
@@ -327,6 +339,11 @@ class SolveSpec:
                     "(inner_dtype) are not combinable yet: the deflation "
                     "basis lives on the native normal operator, which "
                     "the refined solve rebuilds per escalation rung")
+        if self.donate_rhs and self.inner_dtype is not None:
+            raise ValueError(
+                "donate_rhs applies to plain solves only: the refined "
+                "outer loop re-reads the f64 source every pass, so its "
+                "buffers cannot be donated")
 
     def validate_rhs(self, eta_e, eta_o, lattice: LatticeSpec) -> bool:
         """Check a source pair against the lattice and ``nrhs``;
@@ -376,4 +393,6 @@ class SolveSpec:
             parts.append(f"defl{self.deflate_rank}-{self.deflate_mode}")
             if self.deflate_iters is not None:
                 parts.append(f"li{self.deflate_iters}")
+        if self.donate_rhs:
+            parts.append("donate")
         return ":".join(parts)

@@ -264,6 +264,43 @@ def _result(x, iters, rel, conv, div) -> SolveResult:
                        jnp.logical_and(conv, jnp.logical_not(div)), div)
 
 
+def _col_field(v, lo: int, hi: int):
+    """Slice a per-column result field to columns ``[lo, hi)``; scalar
+    fields (an unbatched solve's iterations, the default ``diverged=
+    False``) pass through unchanged."""
+    if hasattr(v, "ndim") and getattr(v, "ndim", 0) >= 1:
+        return v[lo:hi]
+    return v
+
+
+def split_columns(res, bounds):
+    """Split a batched solve result back into per-request results.
+
+    ``bounds`` is a sequence of ``(lo, hi)`` column ranges over the
+    leading RHS axis — the serving layer's coalescing map (request i
+    occupies columns ``lo_i..hi_i`` of the batch it rode in).  Every
+    per-column field (``x``, ``iterations``, ``residual``,
+    ``converged``, ``diverged``) is sliced, so each request gets back
+    exactly its own columns' iteration counts, exit residuals, and
+    convergence/divergence verdicts — the per-column freeze semantics
+    make these independently meaningful (a frozen converged column is
+    bit-identical to what an unshared solve of it would have kept).
+    Works on :class:`SolveResult` and (duck-typed) on
+    :class:`RefinedResult` — scalar bookkeeping fields
+    (``outer_iterations``, ``f64_applies``, ...) are shared by the
+    whole batch and pass through to every part.
+    """
+    parts = []
+    for lo, hi in bounds:
+        lo, hi = int(lo), int(hi)
+        if lo < 0 or hi <= lo:
+            raise ValueError(
+                f"column bounds must be 0 <= lo < hi; got ({lo}, {hi})")
+        parts.append(type(res)(*[
+            _col_field(v, lo, hi) for v in res]))
+    return parts
+
+
 class RefinedResult(NamedTuple):
     """Result of a mixed-precision (iterative-refinement) solve.
 

@@ -1,0 +1,43 @@
+"""``repro.serving`` — the propagator-serving daemon.
+
+Independent solve requests against the same bound
+:class:`~repro.api.WilsonMatrix` + :class:`~repro.api.SolveSpec`
+coalesce into one multi-RHS block (the bandwidth-bound kernel streams
+the gauge field once per batch — see ``BENCH_multirhs.json`` for the
+arithmetic-intensity ledger), then split back per request with each
+request's own iterations / residual / convergence verdict, guaranteed
+independent by the solvers' per-column freeze semantics.
+
+Layers (each importable on its own):
+
+* :mod:`repro.serving.policy` — :class:`BatchingPolicy`,
+  :class:`AdmissionPolicy`, and the typed error taxonomy.
+* :mod:`repro.serving.queue` — the thread-safe coalescing queue.
+* :mod:`repro.serving.pool` — :class:`SessionPool` of bound matrices
+  with LRU eviction, warmup, and per-entry degradation.
+* :mod:`repro.serving.daemon` — :class:`PropagatorDaemon` (submit ->
+  future -> :class:`RequestResult`) and the stdlib-asyncio HTTP front
+  end :func:`serve_http`.
+
+CLI: ``python -m repro.launch.serve``.
+"""
+from __future__ import annotations
+
+from .daemon import (HttpServerThread, PropagatorDaemon, RequestResult,
+                     decode_array, encode_array, serve_http,
+                     spec_from_json)
+from .policy import (AdmissionPolicy, BadRequestError, BatchingPolicy,
+                     DrainingError, RequestTimeoutError, ServingError,
+                     ShedError, UnknownMatrixError)
+from .pool import PoolEntry, SessionPool
+from .queue import RequestQueue, SolveRequest
+
+__all__ = [
+    "PropagatorDaemon", "RequestResult", "serve_http",
+    "HttpServerThread",
+    "encode_array", "decode_array", "spec_from_json",
+    "BatchingPolicy", "AdmissionPolicy",
+    "ServingError", "ShedError", "RequestTimeoutError",
+    "DrainingError", "UnknownMatrixError", "BadRequestError",
+    "SessionPool", "PoolEntry", "RequestQueue", "SolveRequest",
+]

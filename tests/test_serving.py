@@ -1,0 +1,552 @@
+"""Serving daemon suite: coalescing correctness (batched answers match
+solo answers per request), ragged split-back, admission/deadline typed
+rejections that never poison the pool, chaos containment of a poisoned
+request inside a shared batch, recycle-deflation harvesting across a
+served stream, and the stdlib HTTP front end."""
+import json
+import threading
+import urllib.error
+import urllib.request
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import evenodd, su3
+from repro.resilience import nan_spinor_column
+from repro.serving import (AdmissionPolicy, BadRequestError,
+                           BatchingPolicy, DrainingError,
+                           HttpServerThread, PropagatorDaemon,
+                           RequestQueue, RequestTimeoutError,
+                           SessionPool, ShedError, SolveRequest,
+                           UnknownMatrixError, decode_array,
+                           encode_array, spec_from_json)
+
+KAPPA = 0.1245
+SHAPE = (4, 4, 4, 8)
+
+
+def _matrix(backend="jnp", seed=7, **bind):
+    U = su3.weak_gauge(jax.random.PRNGKey(seed), SHAPE, eps=0.2)
+    Ue, Uo = evenodd.pack_gauge(U)
+    return api.WilsonMatrix.bind(Ue, Uo, KAPPA, backend=backend, **bind)
+
+
+def _source(seed, nrhs=None):
+    bshape = (() if nrhs is None else (nrhs,)) + (*SHAPE, 4, 3)
+    k = jax.random.PRNGKey(seed)
+    psi = (jax.random.normal(k, bshape)
+           + 1j * jax.random.normal(jax.random.fold_in(k, 1), bshape)
+           ).astype(jnp.complex64)
+    if nrhs is None:
+        return evenodd.pack(psi)
+    return jax.vmap(evenodd.pack)(psi)
+
+
+def _daemon(matrix=None, *, max_block=4, linger_s=0.05,
+            buckets=(1, 2, 4), name="cfg", **kw):
+    d = PropagatorDaemon(
+        batching=BatchingPolicy(max_block=max_block, linger_s=linger_s,
+                                buckets=buckets), **kw)
+    d.register(name, matrix if matrix is not None else _matrix())
+    return d
+
+
+# --- policy ----------------------------------------------------------
+
+
+def test_bucket_quantization():
+    p = BatchingPolicy(max_block=8, buckets=(1, 2, 4, 8))
+    assert [p.bucket(n) for n in (1, 2, 3, 4, 5, 8)] == \
+        [1, 2, 4, 4, 8, 8]
+    with pytest.raises(ValueError):
+        p.bucket(9)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        BatchingPolicy(buckets=(2, 1))
+    with pytest.raises(ValueError):
+        BatchingPolicy(max_block=8, buckets=(1, 2, 4))
+    with pytest.raises(ValueError):
+        BatchingPolicy(linger_s=-1.0)
+    with pytest.raises(ValueError):
+        AdmissionPolicy(max_queue_depth=0)
+    with pytest.raises(ValueError):
+        AdmissionPolicy(default_timeout_s=0.0)
+
+
+def test_errors_are_typed():
+    for cls, status in [(ShedError, 429), (RequestTimeoutError, 504),
+                        (DrainingError, 503),
+                        (UnknownMatrixError, 404),
+                        (BadRequestError, 400)]:
+        assert cls.http_status == status
+        assert cls.code != "error"
+
+
+# --- queue (fake clock; no JAX) --------------------------------------
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class _Src:
+    """Array stand-in: the queue only reads ``shape[0]``."""
+
+    def __init__(self, n):
+        self.shape = (n,)
+
+
+def _req(key, n, clock, deadline=None):
+    from concurrent.futures import Future
+    return SolveRequest(key, _Src(n), _Src(n), deadline=deadline,
+                        submitted_at=clock(), future=Future())
+
+
+def test_queue_coalesces_to_max_block():
+    clock = _Clock()
+    q = RequestQueue(BatchingPolicy(max_block=4, linger_s=10.0,
+                                    buckets=(1, 2, 4)),
+                     AdmissionPolicy(), clock=clock)
+    for _ in range(5):
+        q.submit(_req("k", 1, clock))
+    key, batch = q.wait_ready(stop_event=threading.Event())
+    assert key == "k" and len(batch) == 4
+    assert q.depth == 1  # fifth request waits for the next batch
+
+
+def test_queue_linger_dispatches_ragged():
+    clock = _Clock()
+    q = RequestQueue(BatchingPolicy(max_block=4, linger_s=1.0,
+                                    buckets=(1, 2, 4)),
+                     AdmissionPolicy(), clock=clock)
+    q.submit(_req("k", 1, clock))
+    clock.t = 0.5
+    q.submit(_req("k", 2, clock))
+    clock.t = 1.01  # oldest request's linger expired
+    _, batch = q.wait_ready(stop_event=threading.Event())
+    assert [r.nrhs for r in batch] == [1, 2]
+
+
+def test_queue_never_splits_a_request():
+    clock = _Clock()
+    q = RequestQueue(BatchingPolicy(max_block=4, linger_s=0.0,
+                                    buckets=(1, 2, 4)),
+                     AdmissionPolicy(), clock=clock)
+    q.submit(_req("k", 3, clock))
+    q.submit(_req("k", 2, clock))  # 3+2 > 4: must not ride along
+    _, batch = q.wait_ready(stop_event=threading.Event())
+    assert [r.nrhs for r in batch] == [3]
+    assert q.depth == 1
+
+
+def test_queue_sheds_at_depth():
+    clock = _Clock()
+    q = RequestQueue(BatchingPolicy(), AdmissionPolicy(max_queue_depth=2),
+                     clock=clock)
+    q.submit(_req("k", 1, clock))
+    q.submit(_req("k", 1, clock))
+    with pytest.raises(ShedError):
+        q.submit(_req("k", 1, clock))
+
+
+def test_queue_expires_with_partial_stats():
+    clock = _Clock()
+    q = RequestQueue(BatchingPolicy(max_block=4, linger_s=100.0,
+                                    buckets=(1, 2, 4)),
+                     AdmissionPolicy(), clock=clock)
+    r = _req("k", 1, clock, deadline=1.0)
+    q.submit(r)
+    clock.t = 2.0
+    stop = threading.Event()
+    stop.set()
+    assert q.wait_ready(stop_event=stop) is None  # drained empty
+    with pytest.raises(RequestTimeoutError) as ei:
+        r.future.result(timeout=0)
+    assert ei.value.stats["queued_s"] == pytest.approx(2.0)
+    assert q.depth == 0
+
+
+def test_queue_keys_do_not_mix():
+    clock = _Clock()
+    q = RequestQueue(BatchingPolicy(max_block=4, linger_s=0.0,
+                                    buckets=(1, 2, 4)),
+                     AdmissionPolicy(), clock=clock)
+    q.submit(_req("a", 1, clock))
+    q.submit(_req("b", 1, clock))
+    _, batch = q.wait_ready(stop_event=threading.Event())
+    assert len(batch) == 1
+
+
+# --- pool ------------------------------------------------------------
+
+
+def test_pool_lru_eviction():
+    pool = SessionPool(capacity=2)
+    m = _matrix()
+    pool.register("a", m)
+    pool.register("b", m)
+    pool.entry("a")  # touch: "b" becomes LRU
+    pool.register("c", m)
+    assert pool.names() == ("a", "c")
+    assert pool.stats()["evictions"] == ["b"]
+    with pytest.raises(UnknownMatrixError):
+        pool.entry("b")
+
+
+def test_pool_warmup_pretraces_buckets():
+    pool = SessionPool()
+    pool.register("a", _matrix())
+    spec = api.SolveSpec(method="cgnr", tol=1e-6)
+    timings = pool.warmup("a", spec, buckets=(1, 2))
+    assert sorted(timings) == [1, 2]
+    st = pool.stats()["entries"]["a"]["session"]
+    assert st["traces"] == 2
+    # live traffic at a warmed bucket reuses the executable: no trace
+    e = pool.entry("a")
+    eta_e, eta_o = _source(11, nrhs=2)
+    e.session.solve_block(eta_e, eta_o, spec)
+    assert pool.stats()["entries"]["a"]["session"]["traces"] == 2
+
+
+# --- daemon: coalescing correctness ----------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas_fused"])
+def test_coalesced_matches_individual(backend):
+    """Requests answered from a shared batch agree with solo solves of
+    the same matrix/spec to 1e-5 — coalescing is a scheduling decision,
+    not a numerical one."""
+    matrix = _matrix(backend)
+    spec = api.SolveSpec(method="cgnr", tol=1e-6)
+    solo = api.SolveSession(matrix)
+    want = []
+    sources = [_source(20 + i) for i in range(3)]
+    for eta_e, eta_o in sources:
+        xe, xo, _ = solo.solve(eta_e, eta_o, spec)
+        want.append((xe, xo))
+
+    d = _daemon(matrix, linger_s=0.2)
+    d.start()
+    try:
+        futs = [d.submit("cfg", e, o, spec) for e, o in sources]
+        got = [f.result(timeout=300) for f in futs]
+    finally:
+        d.drain()
+    assert len({r.stats["batch_id"] for r in got}) == 1  # one batch
+    for (we, wo), r in zip(want, got):
+        assert r.converged and not r.diverged
+        np.testing.assert_allclose(np.asarray(r.xi_e[0]),
+                                   np.asarray(we), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(r.xi_o[0]),
+                                   np.asarray(wo), atol=1e-5)
+
+
+def test_ragged_split_back_per_request_stats():
+    """A 1-column and a 2-column request share a batch; each gets its
+    own iterations/residual/convergence arrays of its own width."""
+    d = _daemon(linger_s=0.2)
+    d.start()
+    spec = api.SolveSpec(method="cgnr", tol=1e-6)
+    try:
+        e1, o1 = _source(31, nrhs=None)
+        e2, o2 = _source(32, nrhs=2)
+        f1 = d.submit("cfg", e1, o1, spec)
+        f2 = d.submit("cfg", e2, o2, spec)
+        r1, r2 = f1.result(timeout=300), f2.result(timeout=300)
+    finally:
+        d.drain()
+    assert r1.stats["batch_id"] == r2.stats["batch_id"]
+    assert r1.stats["batch_columns"] == 3
+    assert r1.stats["bucket"] == 4  # padded up: 1 trace per bucket
+    assert len(r1.stats["iterations"]) == 1
+    assert len(r2.stats["iterations"]) == 2
+    assert r1.xi_e.shape[0] == 1 and r2.xi_e.shape[0] == 2
+    assert r1.converged and r2.converged
+    assert len(r1.stats["residual"]) == 1
+    assert len(r2.stats["residual"]) == 2
+
+
+def test_executable_cache_one_trace_per_bucket():
+    d = _daemon(linger_s=0.15)
+    d.start()
+    spec = api.SolveSpec(method="cgnr", tol=1e-6)
+    try:
+        # wave 1: three singles -> batch of 3 -> bucket 4
+        futs = [d.submit("cfg", *_source(40 + i), spec)
+                for i in range(3)]
+        [f.result(timeout=300) for f in futs]
+        # wave 2: same shape again -> same bucket -> cache hit
+        futs = [d.submit("cfg", *_source(50 + i), spec)
+                for i in range(3)]
+        [f.result(timeout=300) for f in futs]
+    finally:
+        d.drain()
+    sess = d.pool.stats()["entries"]["cfg"]["session"]
+    assert sess["traces"] == 1
+    assert len(sess["keys"]) == 1
+    m = d.metrics()
+    assert m["batches"] == 2
+    assert m["mean_batch_columns"] == 3.0
+
+
+# --- daemon: rejection paths never poison the pool -------------------
+
+
+def test_shed_is_typed_and_pool_survives():
+    d = _daemon(linger_s=0.1,
+                admission=AdmissionPolicy(max_queue_depth=1))
+    # not started: requests stay queued, so the second submit sheds
+    f1 = d.submit("cfg", *_source(60))
+    with pytest.raises(ShedError):
+        d.submit("cfg", *_source(61))
+    d.start()
+    try:
+        assert f1.result(timeout=300).converged
+        # the shed left no residue: a later request is served normally
+        assert d.submit("cfg", *_source(62)).result(
+            timeout=300).converged
+    finally:
+        d.drain()
+    assert not d.pool.stats()["entries"]["cfg"]["degraded"]
+    assert d.metrics()["shed"] == 1
+
+
+def test_timeout_cancels_with_partial_stats():
+    d = _daemon(linger_s=5.0)  # linger longer than the deadline
+    d.start()
+    try:
+        fut = d.submit("cfg", *_source(63), timeout_s=0.05)
+        with pytest.raises(RequestTimeoutError) as ei:
+            fut.result(timeout=60)
+        assert ei.value.stats["queued_s"] >= 0.05
+        assert ei.value.stats["nrhs"] == 1
+        # daemon still serves after the cancellation
+        assert d.submit("cfg", *_source(64),
+                        timeout_s=120).result(timeout=300).converged
+    finally:
+        d.drain()
+
+
+def test_draining_rejects_new_work():
+    d = _daemon()
+    d.start()
+    d.drain()
+    with pytest.raises(DrainingError):
+        d.submit("cfg", *_source(65))
+
+
+def test_bad_shapes_and_unknown_matrix_are_typed():
+    d = _daemon()
+    with pytest.raises(UnknownMatrixError):
+        d.submit("nope", *_source(66))
+    with pytest.raises(BadRequestError):
+        d.submit("cfg", jnp.zeros((3, 3)), jnp.zeros((3, 3)))
+    with pytest.raises(BadRequestError):  # more columns than max_block
+        d.submit("cfg", *_source(67, nrhs=5))
+    eta_e, eta_o = _source(68)
+    with pytest.raises(BadRequestError):  # wrong lattice
+        d.submit("cfg", eta_e[:, :2], eta_o[:, :2])
+
+
+# --- chaos: poisoned request contained within its batch --------------
+
+
+def test_nan_request_contained_in_shared_batch():
+    """One request's NaN source must not leak into batchmates: their
+    answers stay bit-identical to a clean run, and only the poisoned
+    request reports diverged."""
+    matrix = _matrix()
+    spec = api.SolveSpec(method="cgnr", tol=1e-6)
+    clean_sources = [_source(70 + i) for i in range(3)]
+
+    def run(sources):
+        d = _daemon(matrix, linger_s=0.2)
+        d.start()
+        try:
+            futs = [d.submit("cfg", e, o, spec) for e, o in sources]
+            return [f.result(timeout=300) for f in futs]
+        finally:
+            d.drain()
+
+    clean = run(clean_sources)
+    poisoned_sources = list(clean_sources)
+    pe, po = poisoned_sources[1]
+    poisoned_sources[1] = (nan_spinor_column(pe[None], 0)[0], po)
+    chaos = run(poisoned_sources)
+
+    assert len({r.stats["batch_id"] for r in chaos}) == 1
+    assert chaos[1].diverged and not chaos[1].converged
+    for j in (0, 2):
+        assert chaos[j].converged and not chaos[j].diverged
+        np.testing.assert_array_equal(np.asarray(chaos[j].xi_e),
+                                      np.asarray(clean[j].xi_e))
+        np.testing.assert_array_equal(np.asarray(chaos[j].xi_o),
+                                      np.asarray(clean[j].xi_o))
+
+
+# --- PR 9 follow-up: recycle harvest across a served stream ----------
+
+
+@pytest.mark.parametrize("method", ["cg", "blockcg"])
+def test_recycle_deflation_fills_from_served_stream(method):
+    """Individually-submitted requests coalesce into batched solves;
+    every converged column — including individual columns of a blockcg
+    block — is harvested into the recycle span, and the iteration
+    count drops across the served stream."""
+    d = _daemon(linger_s=0.3)
+    d.start()
+    spec = api.SolveSpec(method=method, tol=1e-6, deflate_rank=24,
+                         deflate_mode="recycle")
+    iters = []
+    try:
+        for wave in range(6):
+            futs = [d.submit("cfg", *_source(80 + 4 * wave + i), spec)
+                    for i in range(4)]
+            rs = [f.result(timeout=300) for f in futs]
+            assert all(r.converged for r in rs)
+            iters.append(max(r.stats["iterations"][0] for r in rs))
+    finally:
+        d.drain()
+    entry = d.pool.stats()["entries"]["cfg"]
+    row = next(iter(entry["session"]["keys"].values()))
+    assert row["deflation"]["mode"] == "recycle"
+    assert row["deflation"]["filled"] > 0
+    assert row["deflation"]["harvested"] >= row["deflation"]["filled"]
+    # batched solves fed the span: later waves solve strictly cheaper
+    assert iters[-1] < iters[0]
+
+
+# --- donation --------------------------------------------------------
+
+
+@pytest.mark.filterwarnings("ignore:Some donated buffers")
+def test_donated_batch_matches_undonated():
+    matrix = _matrix()
+    spec = api.SolveSpec(method="cgnr", tol=1e-6)
+    session = api.SolveSession(matrix)
+    eta_e, eta_o = _source(90, nrhs=2)
+    xe0, xo0, res0, parts0 = session.solve_block(eta_e, eta_o, spec)
+    xe1, xo1, res1, parts1 = session.solve_block(
+        jnp.array(eta_e), jnp.array(eta_o), spec, donate=True)
+    np.testing.assert_allclose(np.asarray(xe1), np.asarray(xe0),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(xo1), np.asarray(xo0),
+                               atol=1e-6)
+    assert len(parts0) == len(parts1) == 2
+    # donation is a distinct executable, not a retrace of the same key
+    toks = {k.split("|")[0] for k in session.stats()["keys"]}
+    assert len(toks) == 2
+
+
+def test_donate_rhs_rejected_for_refined_solves():
+    with pytest.raises(ValueError):
+        api.SolveSpec(inner_dtype="f32", donate_rhs=True)
+
+
+# --- HTTP front end --------------------------------------------------
+
+
+def test_array_codec_roundtrip():
+    a = (np.arange(12, dtype=np.float32).reshape(3, 4)
+         + 1j * np.ones((3, 4), np.float32)).astype(np.complex64)
+    b = decode_array(encode_array(a))
+    assert b.dtype == a.dtype and b.shape == a.shape
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(decode_array([[1.0, 2.0]]),
+                                  np.asarray([[1.0, 2.0]]))
+    with pytest.raises(BadRequestError):
+        decode_array({"npy": "!!!"})
+    with pytest.raises(BadRequestError):
+        decode_array("nope")
+
+
+def test_spec_from_json_whitelists_fields():
+    s = spec_from_json({"method": "bicgstab", "tol": 1e-5})
+    assert s.method == "bicgstab" and s.tol == 1e-5
+    assert spec_from_json(None) == api.SolveSpec()
+    with pytest.raises(BadRequestError):
+        spec_from_json({"methd": "cg"})
+    with pytest.raises(BadRequestError):
+        spec_from_json({"method": "not-a-method"})
+    with pytest.raises(BadRequestError):
+        spec_from_json([1, 2])
+
+
+def test_http_end_to_end_with_typed_errors():
+    d = _daemon(linger_s=0.15)
+    d.start()
+    srv = HttpServerThread(d, port=0)
+    host, port = srv.start()
+    base = f"http://{host}:{port}"
+    try:
+        with urllib.request.urlopen(base + "/v1/healthz",
+                                    timeout=30) as r:
+            hz = json.loads(r.read())
+        assert hz["ok"] and hz["matrices"] == ["cfg"]
+
+        def one(i):
+            eta_e, eta_o = _source(100 + i)
+            body = json.dumps({
+                "matrix": "cfg",
+                "eta_e": encode_array(eta_e),
+                "eta_o": encode_array(eta_o),
+                "spec": {"method": "cgnr", "tol": 1e-6},
+            }).encode()
+            req = urllib.request.Request(
+                base + "/v1/solve", data=body,
+                headers={"Content-Type": "application/json"})
+            with urllib.request.urlopen(req, timeout=300) as resp:
+                return json.loads(resp.read())
+
+        with ThreadPoolExecutor(3) as ex:
+            outs = list(ex.map(one, range(3)))
+        assert len({o["stats"]["batch_id"] for o in outs}) == 1
+        for i, o in enumerate(outs):
+            assert o["stats"]["converged"] == [True]
+            xi = decode_array(o["xi_e"])
+            assert xi.shape == (1,) + api.LatticeSpec(
+                SHAPE).spinor_eo_shape()
+
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(urllib.request.Request(
+                base + "/v1/solve",
+                data=json.dumps({"matrix": "nope", "eta_e": [1.0],
+                                 "eta_o": [1.0]}).encode()),
+                timeout=30)
+        assert ei.value.code == 404
+        assert json.loads(ei.value.read())["error"] == "unknown_matrix"
+
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(urllib.request.Request(
+                base + "/v1/solve", data=b"not json"), timeout=30)
+        assert ei.value.code == 400
+
+        with urllib.request.urlopen(base + "/v1/metrics",
+                                    timeout=30) as r:
+            m = json.loads(r.read())
+        assert m["completed"] == 3
+        assert m["mean_batch_columns"] == 3.0
+        assert m["pool"]["entries"]["cfg"]["session"]["traces"] == 1
+    finally:
+        srv.stop()
+        d.drain()
+
+
+def test_metrics_shape_without_traffic():
+    d = _daemon()
+    m = d.metrics()
+    assert m["mean_batch_columns"] is None
+    assert m["queue_depth"] == 0
+    assert m["batching"]["buckets"] == [1, 2, 4]
+    assert "cfg" in m["pool"]["entries"]
+    json.dumps(m)  # the whole report is wire-clean
